@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+— correctness only), so the timed numbers compare the *jnp reference
+paths* that XLA:CPU executes; Pallas-vs-ref equality is asserted in
+tests.  Derived columns report bytes moved per call — the quantity the
+TPU kernel's DMA plan controls.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gather import ref as gref
+from repro.kernels.paged_attn import ref as pref
+from repro.kernels.segment import ref as sref
+from repro.kernels.slice import ref as slref
+
+
+def _time(fn, *args, repeats=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6   # µs
+
+
+def bench() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # gather_rows: the exact-byte extraction read
+    for n, d, m in [(100_000, 64, 4096), (1_000_000, 64, 65_536)]:
+        table = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        idx = jnp.asarray(rng.integers(0, n, m).astype(np.int32))
+        f = jax.jit(gref.gather_rows)
+        us = _time(f, table, idx)
+        rows.append(dict(name=f"gather_rows_{n}x{d}_m{m}",
+                         us_per_call=us,
+                         derived=f"{m * d * 4 / 1e6:.1f}MB_read"))
+
+    # embedding bag
+    table = jnp.asarray(rng.normal(size=(100_000, 64)), jnp.float32)
+    bags = jnp.asarray(rng.integers(-1, 100_000, (8192, 4)).astype(
+        np.int32))
+    us = _time(jax.jit(gref.gather_rows_bag), table, bags)
+    rows.append(dict(name="gather_bag_8192x4", us_per_call=us,
+                     derived=f"{8192 * 4 * 64 * 4 / 1e6:.1f}MB_read"))
+
+    # batched polytope slicing (one BFS layer)
+    verts = jnp.asarray(rng.uniform(0, 10, (1024, 8, 4)), jnp.float32)
+    valid = jnp.ones((1024, 8), bool)
+    planes = jnp.asarray(rng.uniform(0, 10, 1024), jnp.float32)
+    f = jax.jit(lambda v, m, p: slref.slice_batch(v, m, p, 1))
+    us = _time(f, verts, valid, planes)
+    rows.append(dict(name="slice_batch_1024x8x4", us_per_call=us,
+                     derived=f"{1024 / max(us, 1e-9):.1f}polytopes_per_us"))
+
+    # paged decode attention
+    B, H, KVH, DH, PS, NP, PM = 16, 16, 4, 64, 16, 512, 32
+    q = jnp.asarray(rng.normal(size=(B, H, DH)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(NP, KVH, PS, DH)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(NP, KVH, PS, DH)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, NP, (B, PM)).astype(np.int32))
+    lens = jnp.asarray(rng.integers(1, PS * PM, B).astype(np.int32))
+    us = _time(jax.jit(pref.paged_decode_attention), q, kp, vp, bt, lens)
+    live = float(jnp.sum(jnp.ceil(lens / PS))) * PS * KVH * DH * 4 * 2
+    rows.append(dict(name="paged_attn_b16_s512", us_per_call=us,
+                     derived=f"{live / 1e6:.1f}MB_live_pages"))
+
+    # segment sum (GNN aggregation)
+    msg = jnp.asarray(rng.normal(size=(100_000, 64)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, 4096, 100_000).astype(np.int32))
+    f = jax.jit(lambda m, s: sref.segment_sum(m, s, 4096))
+    us = _time(f, msg, seg)
+    rows.append(dict(name="segment_sum_100k_to_4k", us_per_call=us,
+                     derived=f"{100_000 * 64 * 4 / 1e6:.1f}MB_scattered"))
+    return rows

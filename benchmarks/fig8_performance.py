@@ -1,0 +1,106 @@
+"""Paper Fig. 8 reproduction: slicing-time scaling.
+
+8a/8b — slicing vs total algorithm time, by #extracted points, for
+request dims 2–5 (paper: ~linear in points, ~independent of dim).
+8c — union-of-subshapes vs single shape (paper: unions cost more).
+8d — box vs disk vs polygon primitives.
+
+All timings on the host CPU like the paper's M1 measurements; the
+quantity of interest is the *scaling*, not absolute walltime.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (Box, Disk, OrderedAxis, Polygon, Request, Slicer,
+                        TensorDatacube, Union)
+
+
+def _cube(ndim: int, size: int = 64) -> TensorDatacube:
+    axes = [OrderedAxis(f"ax{i}", np.arange(float(size)))
+            for i in range(ndim)]
+    return TensorDatacube(axes)
+
+
+def _run(cube, request, repeats: int = 3):
+    best = None
+    for _ in range(repeats):
+        plan, stats = Slicer(cube).extract_plan(request)
+        rec = (plan.n_points, stats.slicing_time_s, stats.total_time_s,
+               stats.n_slices)
+        best = rec if best is None or rec[1] < best[1] else best
+    return best
+
+
+def fig8a_b() -> list[dict]:
+    """Slicing + total time vs #points for dims 2..5."""
+    rows = []
+    for ndim in (2, 3, 4, 5):
+        cube = _cube(ndim)
+        for width in (2, 4, 8, 16, 24):
+            if width ** ndim > 2_000_000:
+                continue
+            names = tuple(f"ax{i}" for i in range(ndim))
+            req = Request([Box(names, [0.0] * ndim,
+                               [float(width - 1)] * ndim)])
+            n, ts, tt, ns = _run(cube, req)
+            rows.append(dict(fig="8ab", ndim=ndim, n_points=n,
+                             slicing_s=ts, total_s=tt, n_slices=ns))
+    return rows
+
+
+def fig8c() -> list[dict]:
+    """Union of k sub-boxes tiling [0,48)² vs the single box."""
+    cube = _cube(2)
+    rows = []
+    for k in (1, 2, 4, 8):
+        w = 48 // k
+        shapes = [Box(("ax0", "ax1"), [i * w, 0.0],
+                      [(i + 1) * w - 1e-9, 47.0]) for i in range(k)]
+        req = Request([Union(shapes)]) if k > 1 else Request(shapes)
+        n, ts, tt, ns = _run(cube, req)
+        rows.append(dict(fig="8c", n_subshapes=k, n_points=n,
+                         slicing_s=ts, total_s=tt, n_slices=ns))
+    return rows
+
+
+def fig8d() -> list[dict]:
+    """Box vs disk vs polygon(square) at matched extents."""
+    cube = _cube(2)
+    rows = []
+    for r in (4, 8, 16, 24):
+        shapes = {
+            "box": Box(("ax0", "ax1"), [32.0 - r, 32.0 - r],
+                       [32.0 + r, 32.0 + r]),
+            "disk": Disk(("ax0", "ax1"), (32.0, 32.0), float(r),
+                         segments=32),
+            "polygon": Polygon(("ax0", "ax1"), np.array(
+                [[32.0 - r, 32.0 - r], [32.0 + r, 32.0 - r],
+                 [32.0 + r, 32.0 + r], [32.0 - r, 32.0 + r]])),
+        }
+        for name, shape in shapes.items():
+            n, ts, tt, ns = _run(cube, Request([shape]))
+            rows.append(dict(fig="8d", shape=name, radius=r, n_points=n,
+                             slicing_s=ts, total_s=tt, n_slices=ns))
+    return rows
+
+
+def linearity_check(rows: list[dict]) -> dict:
+    """Paper claim: slicing time ~linear in points, ~dim-independent."""
+    import numpy as np
+
+    by_dim = {}
+    for r in rows:
+        if r["fig"] == "8ab" and r["n_points"] > 8:
+            by_dim.setdefault(r["ndim"], []).append(
+                (r["n_points"], r["slicing_s"]))
+    slopes = {}
+    for d, pts in by_dim.items():
+        pts = np.asarray(sorted(pts))
+        if len(pts) >= 2:
+            slopes[d] = float(np.polyfit(pts[:, 0], pts[:, 1], 1)[0])
+    return {"us_per_point_by_dim": {d: s * 1e6
+                                    for d, s in slopes.items()}}

@@ -1,0 +1,190 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Three terms per (arch × shape), single-pod mesh (deliverable g):
+
+  compute    = FLOPs/device   / peak_FLOP/s        (197 TF bf16, v5e)
+  memory     = bytes/device   / HBM_bw             (819 GB/s)
+  collective = coll_bytes/dev / ICI link bw        (~50 GB/s/link)
+
+Scan correction: XLA's cost_analysis counts while-loop bodies once, so
+scanned-layer models are corrected with the unrolled micro-probes
+(dryrun keys ``…|probe:pXY``):
+
+  micro(L) = p11 + Σ_g (n_g − 1) · (probe_g(2) − p11)
+  total    = accum × micro(L) + analytic optimizer cost   (train)
+           = micro(L)                                      (serve)
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) gives the useful-compute
+ratio; the dominant term names the bottleneck each §Perf iteration
+attacks.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+# analytic per-param optimizer costs (flops, bytes) per step
+OPT_COST = {"adamw": (12, 28), "adafactor": (8, 16)}
+
+# active params (for 6·N_active·D); computed from configs at report time
+_N_ACTIVE_CACHE: dict[str, float] = {}
+
+
+def n_params_active(arch_id: str) -> tuple[float, float]:
+    """(total params, active params per token)."""
+    if arch_id in _N_ACTIVE_CACHE:
+        return _N_ACTIVE_CACHE[arch_id]
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+
+    arch = get_arch(arch_id)
+    total = None
+    if arch.correction is not None:
+        total = arch.correction().get("n_params")
+    if total is None:
+        smoke = arch.smoke()
+        total = sum(int(np.prod(l.shape)) for l in
+                    jax.tree.leaves(smoke["state"]["params"]))
+    active = total
+    if arch.family == "lm":
+        from repro.configs import _MODULES
+        import importlib
+
+        cfg = importlib.import_module(
+            f"repro.configs.{_MODULES[arch_id]}")._cfg()
+        if cfg.moe is not None:
+            e, k = cfg.moe.n_experts, cfg.moe.top_k
+            # expert params scale by k/E; shared+dense+attn stay active
+            expert_layers = cfg.n_layers - cfg.n_dense_layers
+            per_expert = 3 * cfg.d_model * cfg.moe.d_ff
+            expert_total = expert_layers * e * per_expert
+            active = total - expert_total + expert_layers * k * per_expert
+    _N_ACTIVE_CACHE[arch_id] = (float(total), float(active))
+    return _N_ACTIVE_CACHE[arch_id]
+
+
+def tokens_for(shape: str, kind: str) -> float:
+    from repro.configs.common import LM_SHAPES
+
+    if shape in LM_SHAPES:
+        info = LM_SHAPES[shape]
+        if kind == "decode":
+            return info["batch"]          # one token per sequence
+        return info["batch"] * info["seq"]
+    return 0.0
+
+
+def corrected_costs(results: dict, key: str) -> dict:
+    """Apply the probe-based scan correction to one cell."""
+    rec = results[key]
+    base = {
+        "flops": rec["cost"]["flops_per_device"],
+        "bytes": rec["cost"]["bytes_accessed_per_device"],
+        "coll": rec["collectives"]["total_bytes"],
+        "corrected": False,
+    }
+    corr = rec.get("correction")
+    arch, shape = rec["arch"], rec["shape"]
+    p11 = results.get(f"{arch}|{shape}|sp|probe:p11")
+    p21 = results.get(f"{arch}|{shape}|sp|probe:p21")
+    if not corr or not p11 or not p11.get("ok") or not p21 or not \
+            p21.get("ok"):
+        return base
+
+    def probe_vals(p):
+        return (p["cost"]["flops_per_device"],
+                p["cost"]["bytes_accessed_per_device"],
+                p["collectives"]["total_bytes"])
+
+    f11, b11, c11 = probe_vals(p11)
+    groups = corr["groups"]
+    if corr.get("two_groups"):
+        p12 = results.get(f"{arch}|{shape}|sp|probe:p12")
+        if not p12 or not p12.get("ok"):
+            return base
+        f21, b21, c21 = probe_vals(p21)
+        f12, b12, c12 = probe_vals(p12)
+        nd, nm = groups
+        f = f11 + (nd - 1) * (f21 - f11) + (nm - 1) * (f12 - f11)
+        b = b11 + (nd - 1) * (b21 - b11) + (nm - 1) * (b12 - b11)
+        c = c11 + (nd - 1) * (c21 - c11) + (nm - 1) * (c12 - c11)
+    else:
+        f21, b21, c21 = probe_vals(p21)
+        (n1,) = groups
+        f = f11 + (n1 - 1) * (f21 - f11)
+        b = b11 + (n1 - 1) * (b21 - b11)
+        c = c11 + (n1 - 1) * (c21 - c11)
+
+    if rec["kind"] == "train":
+        a = corr["accum"]
+        of, ob = OPT_COST[corr["opt_kind"]]
+        n_dev = rec["n_devices"]
+        opt_f = of * corr["n_params"] / n_dev
+        opt_b = ob * corr["n_params"] / n_dev
+        return {"flops": a * f + opt_f, "bytes": a * b + opt_b,
+                "coll": a * c, "corrected": True}
+    return {"flops": f, "bytes": b, "coll": c, "corrected": True}
+
+
+def roofline_table(dryrun_path: str = "results/dryrun.json",
+                   mesh: str = "sp") -> list[dict]:
+    results = json.loads(Path(dryrun_path).read_text())
+    rows = []
+    for key, rec in sorted(results.items()):
+        if not key.endswith(f"|{mesh}") or not rec.get("ok"):
+            continue
+        cost = corrected_costs(results, key)
+        t_comp = cost["flops"] / PEAK_FLOPS
+        t_mem = cost["bytes"] / HBM_BW
+        t_coll = cost["coll"] / ICI_BW
+        dom = max(("compute", t_comp), ("memory", t_mem),
+                  ("collective", t_coll), key=lambda kv: kv[1])[0]
+        row = dict(arch=rec["arch"], shape=rec["shape"],
+                   kind=rec["kind"],
+                   flops_per_dev=cost["flops"],
+                   bytes_per_dev=cost["bytes"],
+                   coll_bytes_per_dev=cost["coll"],
+                   t_compute_s=t_comp, t_memory_s=t_mem,
+                   t_collective_s=t_coll, bottleneck=dom,
+                   corrected=cost["corrected"],
+                   mem_temp_gib=rec["memory"]["temp_bytes"] / 2 ** 30,
+                   mem_args_gib=rec["memory"]["argument_bytes"] / 2 ** 30)
+        # useful-compute ratio for LM cells
+        if rec["arch"] in ("deepseek-v3-671b", "arctic-480b", "glm4-9b",
+                           "yi-34b", "granite-3-8b"):
+            total, active = n_params_active(rec["arch"])
+            toks = tokens_for(rec["shape"], rec["kind"])
+            mult = 6.0 if rec["kind"] == "train" else 2.0
+            model_flops = mult * active * toks / rec["n_devices"]
+            row["model_flops_per_dev"] = model_flops
+            row["useful_ratio"] = (model_flops / cost["flops"]
+                                   if cost["flops"] else 0.0)
+        rows.append(row)
+    return rows
+
+
+def print_table(rows: list[dict]) -> None:
+    hdr = (f"{'arch':<22}{'shape':<16}{'bottleneck':<11}"
+           f"{'t_comp(s)':>10}{'t_mem(s)':>10}{'t_coll(s)':>10}"
+           f"{'useful':>7}{'temp GiB':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        u = f"{r.get('useful_ratio', float('nan')):.2f}" \
+            if "useful_ratio" in r else "  -"
+        print(f"{r['arch']:<22}{r['shape']:<16}{r['bottleneck']:<11}"
+              f"{r['t_compute_s']:>10.4f}{r['t_memory_s']:>10.4f}"
+              f"{r['t_collective_s']:>10.4f}{u:>7}"
+              f"{r['mem_temp_gib']:>9.1f}")
+
+
+if __name__ == "__main__":
+    print_table(roofline_table())

@@ -1,0 +1,108 @@
+"""Benchmark harness — one target per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the §Roofline table
+when dry-run results exist).
+
+  python -m benchmarks.run                 # everything (small grids)
+  python -m benchmarks.run --full          # Table 1 at O1280 + roofline
+  python -m benchmarks.run --only table1
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def run_fig8() -> None:
+    from . import fig8_performance as f8
+
+    rows = f8.fig8a_b()
+    for r in rows:
+        _emit(f"fig8ab_dim{r['ndim']}_n{r['n_points']}",
+              r["slicing_s"] * 1e6,
+              f"total_us={r['total_s'] * 1e6:.1f};slices={r['n_slices']}")
+    lin = f8.linearity_check(rows)
+    for d, us in sorted(lin["us_per_point_by_dim"].items()):
+        _emit(f"fig8b_slope_dim{d}", us, "us_per_extracted_point")
+    for r in f8.fig8c():
+        _emit(f"fig8c_union{r['n_subshapes']}", r["slicing_s"] * 1e6,
+              f"n_points={r['n_points']};slices={r['n_slices']}")
+    for r in f8.fig8d():
+        _emit(f"fig8d_{r['shape']}_r{r['radius']}",
+              r["slicing_s"] * 1e6, f"n_points={r['n_points']}")
+
+
+def run_table1(full: bool) -> None:
+    from . import table1_reductions as t1
+
+    rows = t1.table1(n=1280 if full else 128,
+                     mri_size=512 if full else 128)
+    for r in rows:
+        _emit(f"table1_{r['example']}", r["slicing_s"] * 1e6,
+              f"poly_B={r['polytope_bytes']};bbox_B={r['bbox_bytes']};"
+              f"trad_B={r['traditional_bytes']};"
+              f"red_trad={r['reduction_vs_traditional']:.0f}x;"
+              f"red_bbox={r['reduction_vs_bbox']:.2f}x")
+
+
+def run_kernels() -> None:
+    from . import bench_kernels as bk
+
+    for r in bk.bench():
+        _emit(r["name"], r["us_per_call"], r["derived"])
+
+
+def run_roofline() -> None:
+    import os
+
+    from . import roofline
+
+    if not os.path.exists("results/dryrun.json"):
+        print("roofline,skipped,no results/dryrun.json", file=sys.stderr)
+        return
+    for r in roofline.roofline_table():
+        _emit(f"roofline_{r['arch']}_{r['shape']}",
+              max(r["t_compute_s"], r["t_memory_s"],
+                  r["t_collective_s"]) * 1e6,
+              f"bottleneck={r['bottleneck']};"
+              f"t_comp={r['t_compute_s']:.4f};t_mem={r['t_memory_s']:.4f};"
+              f"t_coll={r['t_collective_s']:.4f};"
+              f"useful={r.get('useful_ratio', float('nan')):.3f}")
+
+
+TARGETS = {
+    "fig8": run_fig8,
+    "table1": lambda full=False: run_table1(full),
+    "kernels": run_kernels,
+    "roofline": run_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(TARGETS))
+    ap.add_argument("--full", action="store_true",
+                    help="Table 1 at the paper's O1280 resolution")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.only:
+        if args.only == "table1":
+            run_table1(args.full)
+        else:
+            TARGETS[args.only]()
+        return
+    run_fig8()
+    # default to the paper's O1280 resolution — the headline numbers
+    run_table1(True)
+    run_kernels()
+    run_roofline()
+
+
+if __name__ == "__main__":
+    main()

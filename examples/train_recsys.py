@@ -1,0 +1,62 @@
+"""RecSys example: DLRM CTR training where every embedding lookup is a
+Polytope categorical-axis extraction (EmbeddingBag = plan + exact-byte
+gather + segment-sum), with checkpoint/restart fault tolerance.
+
+  PYTHONPATH=src python examples/train_recsys.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dataplane.recsys import ClickStream
+from repro.models.recsys import DLRMConfig, dlrm_init, dlrm_loss
+from repro.train.fault import FaultConfig, Supervisor
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_state import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_dlrm")
+    args = ap.parse_args()
+
+    cfg = DLRMConfig(rows=50_000, embed_dim=16, n_sparse=8,
+                     bot_mlp=(64, 32, 16), top_mlp=(64, 32, 1))
+    params = dlrm_init(jax.random.PRNGKey(0), cfg)
+    ocfg = OptimizerConfig(kind="adamw", lr=1e-3, warmup_steps=20,
+                           total_steps=args.steps)
+    state = init_train_state(params, ocfg)
+    step = jax.jit(make_train_step(
+        lambda p, b: (dlrm_loss(p, cfg, b), {}), ocfg))
+
+    cs = ClickStream(n_sparse=cfg.n_sparse, rows=cfg.rows)
+
+    def data_fn(s):
+        b = cs.batch(s, args.batch)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    t0 = time.time()
+    losses = []
+
+    def on_metrics(s, m):
+        losses.append(float(m["loss"]))
+        if s % 25 == 0:
+            print(f"step {s:4d}  bce {losses[-1]:.4f}")
+
+    sup = Supervisor(FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50),
+                     step, data_fn)
+    sup.run(state, args.steps, on_metrics=on_metrics)
+    print(f"\nBCE {np.mean(losses[:10]):.4f} → "
+          f"{np.mean(losses[-10:]):.4f} over {args.steps} steps "
+          f"({time.time() - t0:.1f}s); AUC-proxy improving ⇢ the hidden "
+          f"CTR model is being learned through extracted embeddings")
+
+
+if __name__ == "__main__":
+    main()

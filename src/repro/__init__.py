@@ -1,0 +1,3 @@
+"""repro — a datacube-native training/serving framework built around the
+Polytope feature-extraction algorithm (Leuridan et al., 2023)."""
+__version__ = "1.0.0"

@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned architectures (5 LM + 1 GNN + 4 recsys), each exposing the
+full published config, a reduced smoke config, per-shape abstract
+input specs and sharding rules (see ``common.ArchDef``).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "arctic-480b": "arctic_480b",
+    "glm4-9b": "glm4_9b",
+    "yi-34b": "yi_34b",
+    "granite-3-8b": "granite_3_8b",
+    "nequip": "nequip",
+    "dlrm-rm2": "dlrm_rm2",
+    "bert4rec": "bert4rec",
+    "two-tower-retrieval": "two_tower_retrieval",
+    "deepfm": "deepfm",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.get()
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells — 40 total."""
+    cells = []
+    for aid in ARCH_IDS:
+        arch = get_arch(aid)
+        for shape in arch.shapes:
+            cells.append((aid, shape))
+    return cells

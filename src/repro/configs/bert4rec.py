@@ -1,0 +1,37 @@
+"""BERT4Rec [arXiv:1904.06690]: bidirectional 2-block transformer over
+item sequences (embed 64, 2 heads, seq 200), cloze objective.
+
+The item vocabulary is sized 10⁶ so the ``retrieval_cand`` shape
+(scoring 10⁶ candidates) is the model's own softmax head — noted in
+DESIGN.md §Arch-applicability."""
+
+from repro.models.recsys import bert4rec_config
+from repro.train.optimizer import OptimizerConfig
+
+from .common import recsys_arch
+
+ID = "bert4rec"
+
+
+def _cfg():
+    import dataclasses
+    # vocab = n_items + 2 = 2^20 exactly → shards evenly over 16-way TP.
+    # scan_unroll: only 2 layers, so unrolled HLO keeps cost_analysis
+    # exact (no while-loop undercount) at negligible compile cost.
+    c = bert4rec_config(n_items=1_048_574, seq_len=200)
+    return dataclasses.replace(c, scan_unroll=True)
+
+
+def _smoke():
+    import dataclasses
+    c = bert4rec_config(n_items=500, seq_len=16)
+    return dataclasses.replace(c, name=ID + "-smoke", d_model=32,
+                               n_layers=2, d_ff=64, n_heads=2,
+                               n_kv_heads=2, d_head=16)
+
+
+def get():
+    return recsys_arch(ID, "bert4rec", _cfg(), _smoke(),
+                       OptimizerConfig(kind="adamw", lr=1e-3,
+                                       warmup_steps=100,
+                                       total_steps=300_000))

@@ -1,0 +1,551 @@
+"""Architecture definitions: model config + abstract inputs + sharding +
+step functions for every (arch × shape) cell.
+
+An :class:`ArchDef` answers, for each assigned input shape:
+  * ``lowering(shape, mesh)`` — the function to ``jit(...).lower()``,
+    its abstract arguments (ShapeDtypeStructs — never allocated), and
+    the PartitionSpec trees, exactly what the multi-pod dry-run needs;
+  * ``smoke_batch(shape)`` — small concrete arrays for CPU smoke tests.
+
+Three families: "lm" (5 transformer archs × train/prefill/decode/500k),
+"gnn" (NequIP × 4 graph regimes), "recsys" (4 archs × 4 serving
+regimes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import nequip as nq
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.train_state import make_train_step
+
+
+@dataclass
+class Lowering:
+    fn: Callable
+    args: tuple                 # abstract avals (pytrees of SDS)
+    in_specs: tuple             # matching PartitionSpec pytrees
+    donate: tuple = ()
+    kind: str = "train"         # train | prefill | decode | serve
+
+
+@dataclass
+class ArchDef:
+    arch_id: str
+    family: str                 # lm | gnn | recsys
+    shapes: tuple[str, ...]
+    lowering: Callable[[str, Mesh], Lowering]
+    smoke: Callable[[], dict]   # returns {fn, args…} run on CPU
+    describe: Callable[[], dict]
+    # Cost probes: XLA cost_analysis counts while-loop bodies once, so
+    # scanned-layer models are measured via small *unrolled* probe
+    # lowerings and linearly extrapolated (see launch/roofline.py).
+    # probes(shape, mesh) → {name: Lowering}; correction() → meta dict.
+    probes: Callable[[str, Mesh], dict] | None = None
+    correction: Callable[[], dict] | None = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def dp(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def all_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+# =====================================================================
+# LM family
+# =====================================================================
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def _abstract_params(init_fn, cfg):
+    return jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+
+
+def _opt_specs(opt_kind: str, params_avals, pspecs):
+    """Spec tree for the optimizer state, mirroring its structure."""
+    if opt_kind == "adamw":
+        mv = shd.opt_state_specs(pspecs, params_avals)
+        return {"m": mv, "v": mv, "step": P()}
+    # adafactor: vr drops last dim, vc drops second-to-last
+    def fspec(spec, leaf):
+        shape = np.shape(leaf)
+        spec = shd.add_data_axis(spec, shape)
+        dims = list(spec) + [None] * (len(shape) - len(spec))
+        if len(shape) >= 2:
+            return {"vr": P(*dims[:-1]),
+                    "vc": P(*dims[:-2], dims[-1])}
+        return {"v": P(*dims)}
+
+    f = jax.tree.map(fspec, pspecs, params_avals,
+                     is_leaf=lambda x: isinstance(x, P))
+    return {"f": f, "step": P()}
+
+
+def _abstract_opt(opt_cfg: OptimizerConfig, params_avals):
+    opt_init, _ = make_optimizer(opt_cfg)
+    return jax.eval_shape(opt_init, params_avals)
+
+
+LM_ACCUM = 8   # gradient-accumulation microbatches for train shapes
+
+
+def lm_arch(arch_id: str, cfg: tf.TransformerConfig,
+            smoke_cfg: tf.TransformerConfig, opt_cfg: OptimizerConfig,
+            fsdp: bool = True, accum: int = LM_ACCUM) -> ArchDef:
+    base_rules = shd.lm_rules
+    rules = shd.fsdp_rules(base_rules) if fsdp else base_rules
+
+    def _lower(shape: str, mesh: Mesh, mcfg: tf.TransformerConfig,
+               probe: bool = False) -> Lowering:
+        info = LM_SHAPES[shape]
+        b, s = info["batch"], info["seq"]
+        dpa = dp(mesh)
+
+        params_avals = _abstract_params(tf.init_params, mcfg)
+        pspecs = shd.param_specs(params_avals, rules)
+
+        if info["kind"] == "train":
+            if probe:
+                # one unrolled microbatch, grads only (no optimizer)
+                mb = max(b // accum, 1)
+                batch_avals = {"tokens": _sds((mb, s), jnp.int32),
+                               "labels": _sds((mb, s), jnp.int32)}
+                bspecs = {"tokens": P(dpa, None), "labels": P(dpa, None)}
+
+                def fn(params, batch):
+                    def loss(p):
+                        l, _ = tf.loss_fn(p, mcfg, batch["tokens"],
+                                          batch["labels"])
+                        return l
+
+                    return jax.value_and_grad(loss)(params)
+
+                return Lowering(fn, (params_avals, batch_avals),
+                                (pspecs, bspecs), kind="train")
+
+            opt_avals = _abstract_opt(opt_cfg, params_avals)
+            ospecs = _opt_specs(opt_cfg.kind, params_avals, pspecs)
+            state_avals = {"params": params_avals, "opt": opt_avals}
+            sspecs = {"params": pspecs, "opt": ospecs}
+            batch_avals = {"tokens": _sds((b, s), jnp.int32),
+                           "labels": _sds((b, s), jnp.int32)}
+            bspecs = {"tokens": P(dpa, None), "labels": P(dpa, None)}
+
+            def loss(params, batch):
+                return tf.loss_fn(params, mcfg, batch["tokens"],
+                                  batch["labels"])
+
+            step = make_train_step(loss, opt_cfg, accum_steps=accum)
+            return Lowering(step, (state_avals, batch_avals),
+                            (sspecs, bspecs), donate=(0,), kind="train")
+
+        if info["kind"] == "prefill":
+            tok_avals = _sds((b, s), jnp.int32)
+
+            def fn(params, tokens):
+                return tf.prefill(params, mcfg, tokens, max_seq=s)
+
+            return Lowering(fn, (params_avals, tok_avals),
+                            (pspecs, P(dpa, None)), kind="prefill")
+
+        # decode: one new token against an S-token cache
+        cache_avals = jax.eval_shape(lambda: tf.init_cache(mcfg, b, s))
+        if b == 1:
+            seq_ax = tuple(a for a in ("data", "model")
+                           if a in mesh.axis_names)
+            cspec_batch, cspec_seq = None, seq_ax
+        else:
+            cspec_batch, cspec_seq = dpa, "model"
+
+        def cache_spec(leaf):
+            # (L, B, S, …)
+            extra = (None,) * (len(leaf.shape) - 3)
+            return P(None, cspec_batch, cspec_seq, *extra)
+
+        cspecs = jax.tree.map(cache_spec, cache_avals)
+        tok_aval = _sds((b,), jnp.int32)
+        pos_aval = _sds((b,), jnp.int32)
+        tspec = P(dpa) if b > 1 else P()
+
+        def fn(params, caches, token, position):
+            return tf.decode_step(params, mcfg, caches, token, position)
+
+        return Lowering(fn, (params_avals, cache_avals, tok_aval,
+                             pos_aval),
+                        (pspecs, cspecs, tspec, tspec),
+                        donate=(1,), kind="decode")
+
+    def lowering(shape: str, mesh: Mesh) -> Lowering:
+        return _lower(shape, mesh, cfg)
+
+    def _probe_cfg(g0: int, g1: int) -> tf.TransformerConfig:
+        """Probe with g0 layers in group 0 (+ g1 in group 1 if the arch
+        has two groups).  Single-group archs use g0 as their count.
+        q_chunk is kept (bytes depend on it); the q-chunk loop unrolls
+        under scan_unroll so cost_analysis sees every chunk."""
+        if cfg.moe is not None and cfg.n_dense_layers:
+            nl, ndl = g0 + g1, g0
+        else:
+            nl, ndl = g0, 0
+        return dataclasses.replace(cfg, n_layers=nl, n_dense_layers=ndl,
+                                   scan_unroll=True)
+
+    def probes(shape: str, mesh: Mesh) -> dict:
+        two_groups = cfg.moe is not None and cfg.n_dense_layers > 0
+        out = {"p11": _lower(shape, mesh, _probe_cfg(1, 1), probe=True)}
+        out["p21"] = _lower(shape, mesh, _probe_cfg(2, 1), probe=True)
+        if two_groups:
+            out["p12"] = _lower(shape, mesh, _probe_cfg(1, 2),
+                                probe=True)
+        return out
+
+    def correction() -> dict:
+        groups = cfg.layer_groups()
+        n_params = sum(
+            int(np.prod(l.shape)) for l in
+            jax.tree.leaves(_abstract_params(tf.init_params, cfg)))
+        return {"groups": [n for n, _ in groups],
+                "two_groups": len(groups) > 1,
+                "accum": accum, "opt_kind": opt_cfg.kind,
+                "n_params": n_params}
+
+    def smoke() -> dict:
+        key = jax.random.PRNGKey(0)
+        params = tf.init_params(key, smoke_cfg)
+        toks = jax.random.randint(key, (2, 16), 0, smoke_cfg.vocab)
+
+        def loss(params, batch):
+            return tf.loss_fn(params, smoke_cfg, batch["tokens"],
+                              batch["labels"])
+
+        step = make_train_step(loss, dataclasses.replace(
+            opt_cfg, warmup_steps=2, total_steps=10))
+        from repro.train.train_state import init_train_state
+        state = init_train_state(params, opt_cfg)
+        return {"step": step, "state": state,
+                "batch": {"tokens": toks, "labels": toks},
+                "forward": lambda: tf.forward(params, smoke_cfg, toks)}
+
+    def describe() -> dict:
+        return {"arch": arch_id, "family": "lm",
+                "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                "vocab": cfg.vocab, "moe": cfg.moe is not None}
+
+    return ArchDef(arch_id, "lm", tuple(LM_SHAPES), lowering, smoke,
+                   describe, probes=probes, correction=correction)
+
+
+# =====================================================================
+# GNN family (NequIP)
+# =====================================================================
+# Graph extents are padded up to multiples of 512 (the full device
+# count) — samplers pad with masked nodes/edges anyway, and jit input
+# shardings require even divisibility.  Real sizes in comments.
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=3072, n_edges=10752, d_feat=1433,
+                          n_out=7, readout="node_class"),
+    # real: 2708 nodes / 10556 edges (Cora)
+    "minibatch_lg": dict(n_nodes=169_984, n_edges=168_960, d_feat=602,
+                         n_out=41, readout="node_class", sampled=True),
+    # sampled subgraph of Reddit (232 965 / 114 615 892): 1024 seeds,
+    # fanout 15-10 → 1024+15 360+153 600 nodes, 168 960 edges (exact)
+    "ogb_products": dict(n_nodes=2_449_408, n_edges=61_859_840,
+                         d_feat=100, n_out=47, readout="node_class"),
+    # real: 2 449 029 nodes / 61 859 140 edges
+    "molecule": dict(n_nodes=4096, n_edges=8192, d_feat=16,
+                     n_out=1, readout="energy", n_graphs=128,
+                     forces=True),
+    # real: 128 graphs × 30 nodes / 64 edges = 3840 / 8192
+}
+
+
+def gnn_arch(arch_id: str, base: nq.NequIPConfig,
+             smoke_base: nq.NequIPConfig,
+             opt_cfg: OptimizerConfig) -> ArchDef:
+    def shape_cfg(shape: str) -> nq.NequIPConfig:
+        info = GNN_SHAPES[shape]
+        return dataclasses.replace(base, d_feat=info["d_feat"],
+                                   n_out=info["n_out"],
+                                   readout=info["readout"])
+
+    def lowering(shape: str, mesh: Mesh) -> Lowering:
+        info = GNN_SHAPES[shape]
+        cfg = shape_cfg(shape)
+        n, e = info["n_nodes"], info["n_edges"]
+        axes = all_axes(mesh)
+
+        params_avals = _abstract_params(nq.nequip_init, cfg)
+        pspecs = shd.param_specs(params_avals, shd.gnn_rules)
+        opt_avals = _abstract_opt(opt_cfg, params_avals)
+        ospecs = _opt_specs(opt_cfg.kind, params_avals, pspecs)
+        state_avals = {"params": params_avals, "opt": opt_avals}
+        sspecs = {"params": pspecs, "opt": ospecs}
+
+        batch_avals = {
+            "node_feat": _sds((n, info["d_feat"]), jnp.float32),
+            "positions": _sds((n, 3), jnp.float32),
+            "edge_index": _sds((2, e), jnp.int32),
+        }
+        bspecs = {
+            "node_feat": P(axes, None),
+            "positions": P(axes, None),
+            "edge_index": P(None, axes),
+        }
+        if info["readout"] == "node_class":
+            batch_avals["labels"] = _sds((n,), jnp.int32)
+            batch_avals["label_mask"] = _sds((n,), jnp.float32)
+            bspecs["labels"] = P(axes)
+            bspecs["label_mask"] = P(axes)
+        else:
+            ng = info["n_graphs"]
+            batch_avals.update({
+                "graph_ids": _sds((n,), jnp.int32),
+                "energy": _sds((ng,), jnp.float32),
+                "forces": _sds((n, 3), jnp.float32),
+                "n_graphs": ng,
+            })
+            bspecs.update({"graph_ids": P(axes), "energy": P(),
+                           "forces": P(axes, None), "n_graphs": None})
+
+        def loss(params, batch):
+            return nq.nequip_loss(params, cfg, batch), {}
+
+        step = make_train_step(loss, opt_cfg)
+        # n_graphs is static — close over it
+        if info["readout"] == "energy":
+            ng = batch_avals.pop("n_graphs")
+            bspecs.pop("n_graphs")
+
+            def loss(params, batch):
+                return nq.nequip_loss(params, cfg,
+                                      {**batch, "n_graphs": ng}), {}
+
+            step = make_train_step(loss, opt_cfg)
+        return Lowering(step, (state_avals, batch_avals),
+                        (sspecs, bspecs), donate=(0,), kind="train")
+
+    def smoke() -> dict:
+        cfg = dataclasses.replace(smoke_base, d_feat=8, n_out=3,
+                                  readout="node_class")
+        key = jax.random.PRNGKey(0)
+        params = nq.nequip_init(key, cfg)
+        rng = np.random.default_rng(0)
+        n, e = 16, 40
+        batch = {
+            "node_feat": jnp.asarray(rng.normal(size=(n, 8)),
+                                     jnp.float32),
+            "positions": jnp.asarray(rng.uniform(0, 3, (n, 3)),
+                                     jnp.float32),
+            "edge_index": jnp.asarray(rng.integers(0, n, (2, e)),
+                                      jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, 3, n), jnp.int32),
+            "label_mask": jnp.ones((n,), jnp.float32),
+        }
+
+        def loss(params, b):
+            return nq.nequip_loss(params, cfg, b), {}
+
+        step = make_train_step(loss, opt_cfg)
+        from repro.train.train_state import init_train_state
+        state = init_train_state(params, opt_cfg)
+        return {"step": step, "state": state, "batch": batch,
+                "forward": lambda: nq.nequip_forward(
+                    params, cfg, batch["node_feat"], batch["positions"],
+                    batch["edge_index"])}
+
+    def describe() -> dict:
+        return {"arch": arch_id, "family": "gnn",
+                "channels": base.channels, "l_max": base.l_max,
+                "n_layers": base.n_layers}
+
+    return ArchDef(arch_id, "gnn", tuple(GNN_SHAPES), lowering, smoke,
+                   describe)
+
+
+# =====================================================================
+# RecSys family
+# =====================================================================
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65_536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262_144, kind="serve"),
+    # 10⁶ candidates padded to 2²⁰ so the candidate axis shards evenly
+    "retrieval_cand": dict(batch=1, n_cand=1_048_576, kind="retrieval"),
+}
+
+
+def recsys_arch(arch_id: str, kind: str, cfg: Any, smoke_cfg: Any,
+                opt_cfg: OptimizerConfig) -> ArchDef:
+    """kind ∈ {dlrm, deepfm, twotower, bert4rec}."""
+
+    def make_batch_avals(shape: str, c):
+        info = RECSYS_SHAPES[shape]
+        b = info["batch"]
+        if kind == "dlrm":
+            av = {"dense": _sds((b, c.n_dense), jnp.float32),
+                  "bags": _sds((b, c.n_sparse, c.bag_size), jnp.int32)}
+        elif kind == "deepfm":
+            av = {"bags": _sds((b, c.n_sparse, 1), jnp.int32)}
+        elif kind == "twotower":
+            av = {"user_ids": _sds((b,), jnp.int32),
+                  "item_ids": _sds((b,), jnp.int32),
+                  "item_logq": _sds((b,), jnp.float32)}
+        else:  # bert4rec
+            av = {"items": _sds((b, 200), jnp.int32)}
+        return av
+
+    def loss_for(c):
+        if kind == "dlrm":
+            return lambda p, b: (rs.dlrm_loss(p, c, b), {})
+        if kind == "deepfm":
+            return lambda p, b: (rs.deepfm_loss(p, c, b), {})
+        if kind == "twotower":
+            return lambda p, b: (rs.twotower_loss(p, c, b), {})
+        return lambda p, b: (rs.bert4rec_loss(p, c, b), {})
+
+    def init_for(c):
+        return {"dlrm": rs.dlrm_init, "deepfm": rs.deepfm_init,
+                "twotower": rs.twotower_init,
+                "bert4rec": rs.bert4rec_init}[kind]
+
+    def lowering(shape: str, mesh: Mesh) -> Lowering:
+        info = RECSYS_SHAPES[shape]
+        b = info["batch"]
+        dpa = dp(mesh)
+        init = init_for(cfg)
+        params_avals = _abstract_params(init, cfg)
+        pspecs = shd.param_specs(params_avals, shd.recsys_rules)
+
+        if info["kind"] == "train":
+            opt_avals = _abstract_opt(opt_cfg, params_avals)
+            ospecs = _opt_specs(opt_cfg.kind, params_avals, pspecs)
+            state_avals = {"params": params_avals, "opt": opt_avals}
+            sspecs = {"params": pspecs, "opt": ospecs}
+            batch_avals = make_batch_avals(shape, cfg)
+            bspecs = jax.tree.map(
+                lambda a: P(dpa, *([None] * (len(a.shape) - 1))),
+                batch_avals)
+            if kind == "dlrm" or kind == "deepfm":
+                batch_avals["labels"] = _sds((b,), jnp.float32)
+                bspecs["labels"] = P(dpa)
+            if kind == "bert4rec":
+                batch_avals["labels"] = _sds((b, 200), jnp.int32)
+                batch_avals["mask"] = _sds((b, 200), jnp.float32)
+                bspecs["labels"] = P(dpa, None)
+                bspecs["mask"] = P(dpa, None)
+            step = make_train_step(loss_for(cfg), opt_cfg)
+            return Lowering(step, (state_avals, batch_avals),
+                            (sspecs, bspecs), donate=(0,), kind="train")
+
+        if info["kind"] == "retrieval":
+            if kind == "twotower":
+                n_cand = info["n_cand"]
+
+                def fn(params, user_ids, cand_ids):
+                    return rs.twotower_score_candidates(params, cfg,
+                                                        user_ids,
+                                                        cand_ids)
+
+                return Lowering(
+                    fn,
+                    (params_avals, _sds((1,), jnp.int32),
+                     _sds((n_cand,), jnp.int32)),
+                    (pspecs, P(), P(tuple(a for a in mesh.axis_names))),
+                    kind="serve")
+            if kind == "bert4rec":
+                def fn(params, items):
+                    return rs.bert4rec_score(params, cfg, items)
+
+                return Lowering(fn,
+                                (params_avals, _sds((1, 200), jnp.int32)),
+                                (pspecs, P(None, None)), kind="serve")
+            # dlrm / deepfm: bulk-score 10⁶ candidate rows for one user
+            b = info["n_cand"]
+
+        batch_avals = make_batch_avals(shape, cfg) if info["kind"] != \
+            "retrieval" else None
+        if batch_avals is None:
+            if kind == "dlrm":
+                batch_avals = {"dense": _sds((b, cfg.n_dense),
+                                             jnp.float32),
+                               "bags": _sds((b, cfg.n_sparse,
+                                             cfg.bag_size), jnp.int32)}
+            else:
+                batch_avals = {"bags": _sds((b, cfg.n_sparse, 1),
+                                            jnp.int32)}
+        bspecs = jax.tree.map(
+            lambda a: P(dpa, *([None] * (len(a.shape) - 1))),
+            batch_avals)
+
+        if kind == "dlrm":
+            fn = lambda p, bt: rs.dlrm_forward(p, cfg, bt["dense"],
+                                               bt["bags"])
+        elif kind == "deepfm":
+            fn = lambda p, bt: rs.deepfm_forward(p, cfg, bt["bags"])
+        elif kind == "twotower":
+            fn = lambda p, bt: rs.twotower_score_candidates(
+                p, cfg, bt["user_ids"], bt["item_ids"])
+        else:
+            fn = lambda p, bt: rs.bert4rec_score(p, cfg, bt["items"])
+        return Lowering(fn, (params_avals, batch_avals),
+                        (pspecs, bspecs), kind="serve")
+
+    def smoke() -> dict:
+        c = smoke_cfg
+        key = jax.random.PRNGKey(0)
+        params = init_for(c)(key, c)
+        rng = np.random.default_rng(0)
+        bsz = 8
+        if kind == "dlrm":
+            batch = {"dense": jnp.asarray(rng.normal(
+                size=(bsz, c.n_dense)), jnp.float32),
+                "bags": jnp.asarray(rng.integers(
+                    0, c.rows, (bsz, c.n_sparse, c.bag_size)), jnp.int32),
+                "labels": jnp.asarray(rng.integers(0, 2, bsz),
+                                      jnp.float32)}
+        elif kind == "deepfm":
+            batch = {"bags": jnp.asarray(rng.integers(
+                0, c.rows, (bsz, c.n_sparse, 1)), jnp.int32),
+                "labels": jnp.asarray(rng.integers(0, 2, bsz),
+                                      jnp.float32)}
+        elif kind == "twotower":
+            batch = {"user_ids": jnp.arange(bsz, dtype=jnp.int32),
+                     "item_ids": jnp.arange(bsz, dtype=jnp.int32),
+                     "item_logq": jnp.zeros((bsz,), jnp.float32)}
+        else:
+            items = jnp.asarray(rng.integers(0, c.vocab - 2, (bsz, 16)),
+                                jnp.int32)
+            batch = {"items": items, "labels": items,
+                     "mask": jnp.ones((bsz, 16), jnp.float32)}
+        step = make_train_step(loss_for(c), opt_cfg)
+        from repro.train.train_state import init_train_state
+        state = init_train_state(params, opt_cfg)
+        return {"step": step, "state": state, "batch": batch}
+
+    def describe() -> dict:
+        return {"arch": arch_id, "family": "recsys", "kind": kind}
+
+    return ArchDef(arch_id, "recsys", tuple(RECSYS_SHAPES), lowering,
+                   smoke, describe)

@@ -1,0 +1,26 @@
+"""DeepFM [arXiv:1703.04247]: 39 sparse fields, embed_dim 10,
+deep MLP 400-400-400, FM second-order interaction."""
+
+from repro.models.recsys import DeepFMConfig
+from repro.train.optimizer import OptimizerConfig
+
+from .common import recsys_arch
+
+ID = "deepfm"
+
+
+def _cfg() -> DeepFMConfig:
+    return DeepFMConfig(name=ID, n_sparse=39, rows=1_000_000,
+                        embed_dim=10, mlp_dims=(400, 400, 400))
+
+
+def _smoke() -> DeepFMConfig:
+    return DeepFMConfig(name=ID + "-smoke", n_sparse=6, rows=64,
+                        embed_dim=4, mlp_dims=(16, 16))
+
+
+def get():
+    return recsys_arch(ID, "deepfm", _cfg(), _smoke(),
+                       OptimizerConfig(kind="adamw", lr=1e-3,
+                                       warmup_steps=100,
+                                       total_steps=300_000))

@@ -1,0 +1,27 @@
+"""NequIP [arXiv:2101.03164]: 5 layers, 32 channels, l_max=2, 8 Bessel
+RBFs, 5 Å cutoff, E(3)-equivariant tensor products.  One trunk serves
+all four assigned graph regimes (d_feat / readout vary per shape)."""
+
+from repro.models.nequip import NequIPConfig
+from repro.train.optimizer import OptimizerConfig
+
+from .common import gnn_arch
+
+ID = "nequip"
+
+
+def _base() -> NequIPConfig:
+    return NequIPConfig(name=ID, n_layers=5, channels=32, l_max=2,
+                        n_rbf=8, cutoff=5.0)
+
+
+def _smoke() -> NequIPConfig:
+    return NequIPConfig(name=ID + "-smoke", n_layers=2, channels=8,
+                        l_max=2, n_rbf=4, cutoff=5.0)
+
+
+def get():
+    return gnn_arch(ID, _base(), _smoke(),
+                    OptimizerConfig(kind="adamw", lr=1e-3,
+                                    warmup_steps=100,
+                                    total_steps=50_000))

@@ -1,0 +1,28 @@
+"""Two-tower retrieval [Yi et al., RecSys'19]: embed_dim 256, tower
+MLPs 1024-512-256, dot scoring, in-batch sampled softmax with logQ
+correction.  retrieval_cand = one query × 10⁶ candidates as a single
+sharded matmul."""
+
+from repro.models.recsys import TwoTowerConfig
+from repro.train.optimizer import OptimizerConfig
+
+from .common import recsys_arch
+
+ID = "two-tower-retrieval"
+
+
+def _cfg() -> TwoTowerConfig:
+    return TwoTowerConfig(name=ID, n_users=1_000_000, n_items=1_000_000,
+                          embed_dim=256, tower=(1024, 512, 256))
+
+
+def _smoke() -> TwoTowerConfig:
+    return TwoTowerConfig(name=ID + "-smoke", n_users=128, n_items=128,
+                          embed_dim=16, tower=(32, 16))
+
+
+def get():
+    return recsys_arch(ID, "twotower", _cfg(), _smoke(),
+                       OptimizerConfig(kind="adamw", lr=1e-3,
+                                       warmup_steps=100,
+                                       total_steps=300_000))

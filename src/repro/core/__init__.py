@@ -1,0 +1,29 @@
+# The paper's primary contribution: the Polytope feature-extraction
+# engine — geometry, axes, datacubes, Algorithm-1 slicer, index trees,
+# extraction plans and executors (plus the bounding-box / whole-field
+# baselines the paper compares against).
+from .axes import Axis, CategoricalAxis, CyclicAxis, OrderedAxis
+from .batched import batched_extract_2d, batched_plan_2d
+from .datacube import (BranchingDatacube, Datacube, OctahedralGridDatacube,
+                       TensorDatacube)
+from .extractor import (BoundingBoxExtractor, ExtractResult,
+                        PolytopeExtractor, TraditionalExtractor, gather)
+from .geometry import Polytope, box_polytope, regular_polygon, slice_vertices
+from .hull import convex_hull_prune
+from .index_tree import ExtractionPlan, IndexNode, coalesce_runs, flatten
+from .shapes import (All, Box, ConvexPolytope, Disk, Ellipsoid, Path, Point,
+                     Polygon, Request, Select, Shape, Span, Union, ear_clip)
+from .slicer import Slicer, SliceStats
+
+__all__ = [
+    "Axis", "CategoricalAxis", "CyclicAxis", "OrderedAxis",
+    "BranchingDatacube", "Datacube", "OctahedralGridDatacube",
+    "TensorDatacube", "BoundingBoxExtractor", "ExtractResult",
+    "PolytopeExtractor", "TraditionalExtractor", "gather", "Polytope",
+    "box_polytope", "regular_polygon", "slice_vertices",
+    "convex_hull_prune", "ExtractionPlan", "IndexNode", "coalesce_runs",
+    "flatten", "All", "Box", "ConvexPolytope", "Disk", "Ellipsoid", "Path",
+    "Point", "Polygon", "Request", "Select", "Shape", "Span", "Union",
+    "ear_clip", "Slicer", "SliceStats", "batched_extract_2d",
+    "batched_plan_2d",
+]

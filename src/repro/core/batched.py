@@ -1,0 +1,104 @@
+"""On-device batched extraction for 2-D polytopes on regular grids.
+
+The host slicer (Algorithm 1) plans one request at a time in float64.
+Training pipelines want the opposite trade: *many congruent small
+requests per step* (batched country crops, per-sample regions of
+interest) with static shapes, planned on the accelerator itself.
+
+This module runs one BFS layer of Algorithm 1 as a batched device
+computation: for a batch of convex 2-D polytopes over regular ordered
+axes,
+
+  1. per-polytope extents on axis 0 → index ranges (``searchsorted``),
+  2. slice every (polytope × row) pair at once — the
+     ``repro.kernels.slice`` Pallas kernel (or its jnp oracle),
+  3. per-row 1-D extents on axis 1 → index ranges,
+  4. emit a padded (P, R, C) offset lattice + validity mask — the
+     batched extraction plan consumed by ``gather_rows``.
+
+Shapes are static: R = max rows, C = max columns per row; masked slots
+are -1 (exactly the padding convention of the gather/bag kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.slice import ref as slice_ref
+
+
+@functools.partial(jax.jit, static_argnames=("max_rows", "max_cols",
+                                             "n0", "n1"))
+def batched_plan_2d(verts: jax.Array, valid: jax.Array,
+                    axis0: jax.Array, axis1: jax.Array,
+                    n0: int, n1: int,
+                    max_rows: int, max_cols: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Plan a batch of convex 2-D polytopes on a regular (n0 × n1) grid.
+
+    verts  — (P, V, 2) float32 polytope vertices (axis0, axis1 coords)
+    valid  — (P, V) bool vertex mask
+    axis0  — (n0,) sorted axis-0 index values
+    axis1  — (n1,) sorted axis-1 index values
+
+    Returns (offsets (P, max_rows, max_cols) int32 flat offsets with -1
+    padding, n_points (P,)).
+    """
+    p, v, _ = verts.shape
+    big = jnp.asarray(jnp.inf, verts.dtype)
+
+    c0 = jnp.where(valid, verts[:, :, 0], big)
+    lo0 = jnp.min(c0, axis=1)
+    hi0 = jnp.max(jnp.where(valid, verts[:, :, 0], -big), axis=1)
+
+    # rows intersecting each polytope
+    start = jnp.searchsorted(axis0, lo0 - 1e-6, side="left")  # (P,)
+    row_ids = start[:, None] + jnp.arange(max_rows)[None, :]  # (P, R)
+    row_ok = (row_ids < n0) & \
+        (axis0[jnp.clip(row_ids, 0, n0 - 1)] <= hi0[:, None] + 1e-6)
+    row_vals = axis0[jnp.clip(row_ids, 0, n0 - 1)]
+
+    # slice every (polytope, row) pair: flatten to a (P·R) batch
+    verts_f = jnp.broadcast_to(verts[:, None], (p, max_rows, v, 2)
+                               ).reshape(p * max_rows, v, 2)
+    valid_f = jnp.broadcast_to(valid[:, None], (p, max_rows, v)
+                               ).reshape(p * max_rows, v)
+    planes = row_vals.reshape(p * max_rows)
+    pts, mask = slice_ref.slice_batch(verts_f, valid_f, planes, k=0)
+    # remaining coordinate (axis 1) of each intersection point
+    y = jnp.where(mask, pts[:, :, 1], jnp.inf)
+    lo1 = jnp.min(y, axis=1)
+    y2 = jnp.where(mask, pts[:, :, 1], -jnp.inf)
+    hi1 = jnp.max(y2, axis=1)
+    hit = jnp.isfinite(lo1) & (row_ok.reshape(-1))
+
+    c_start = jnp.searchsorted(axis1, lo1 - 1e-6, side="left")
+    col_ids = c_start[:, None] + jnp.arange(max_cols)[None, :]
+    col_ok = (col_ids < n1) & \
+        (axis1[jnp.clip(col_ids, 0, n1 - 1)] <= hi1[:, None] + 1e-6) & \
+        hit[:, None]
+
+    offsets = jnp.where(
+        col_ok,
+        row_ids.reshape(-1)[:, None] * n1 + jnp.clip(col_ids, 0, n1 - 1),
+        -1).astype(jnp.int32)
+    offsets = offsets.reshape(p, max_rows, max_cols)
+    n_points = jnp.sum(offsets >= 0, axis=(1, 2))
+    return offsets, n_points
+
+
+def batched_extract_2d(flat_data: jax.Array, verts, valid, axis0, axis1,
+                       max_rows: int, max_cols: int):
+    """Plan + gather in one jit: (P, max_rows·max_cols) values with 0 at
+    padded slots, plus the offset lattice."""
+    n0, n1 = int(axis0.shape[0]), int(axis1.shape[0])
+    offsets, n_points = batched_plan_2d(verts, valid, axis0, axis1,
+                                        n0, n1, max_rows, max_cols)
+    flat_off = offsets.reshape(offsets.shape[0], -1)
+    vals = jnp.where(flat_off >= 0,
+                     jnp.take(flat_data, jnp.maximum(flat_off, 0)),
+                     0)
+    return vals, offsets, n_points

@@ -1,0 +1,283 @@
+"""Interface levels (paper §4.1).
+
+* low level   — :class:`ConvexPolytope`: raw vertex lists.
+* high level  — :class:`Box`, :class:`Disk`, :class:`Ellipsoid`,
+  :class:`Polygon` (concave OK — ear-clipped into convex triangles),
+  :class:`Span`, :class:`Point`, :class:`Select`, :class:`All`, plus the
+  constructive ops :class:`Union` and :class:`Path` (sweep along a
+  polyline — the paper's flight-path request).
+* domain level — built on these in ``repro.dataplane`` (country
+  extraction, time-series, vertical profiles, MRI vessels).
+
+Every shape decomposes into convex low-level polytopes
+(``.polytopes()``) and/or categorical selections (``.selects()``); the
+slicer only ever sees those two primitives — "the building blocks of all
+possible Polytope requests".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import numpy as np
+
+from .geometry import Polytope, box_polytope, regular_polygon
+from .hull import convex_hull_prune
+
+
+class Shape:
+    def polytopes(self) -> list[Polytope]:
+        return []
+
+    def selects(self) -> list["Select"]:
+        return []
+
+
+@dataclass
+class Select(Shape):
+    """Specific index values — the only legal query on categorical axes;
+    also usable on ordered axes (snaps to nearest index)."""
+
+    axis: str
+    values: Sequence[Any]
+
+    def selects(self) -> list["Select"]:
+        return [self]
+
+
+@dataclass
+class All(Shape):
+    """Everything on an axis (an unconstrained axis behaves the same)."""
+
+    axis: str
+
+    def polytopes(self) -> list[Polytope]:
+        big = 1e30
+        return [Polytope((self.axis,), np.array([[-big], [big]]))]
+
+
+@dataclass
+class Span(Shape):
+    """1-D interval on an ordered axis."""
+
+    axis: str
+    lo: float
+    hi: float
+
+    def polytopes(self) -> list[Polytope]:
+        return [Polytope((self.axis,), np.array([[self.lo], [self.hi]],
+                                                np.float64))]
+
+
+@dataclass
+class Point(Shape):
+    """Exact point on ordered axes (degenerate polytope)."""
+
+    axes: Sequence[str]
+    coords: Sequence[float]
+
+    def polytopes(self) -> list[Polytope]:
+        return [Polytope(tuple(self.axes),
+                         np.asarray([self.coords], np.float64))]
+
+
+@dataclass
+class Box(Shape):
+    axes: Sequence[str]
+    lows: Sequence[float]
+    highs: Sequence[float]
+
+    def polytopes(self) -> list[Polytope]:
+        return [box_polytope(self.axes, self.lows, self.highs)]
+
+
+@dataclass
+class ConvexPolytope(Shape):
+    """Low-level interface: explicit convex vertex list."""
+
+    axes: Sequence[str]
+    vertices: np.ndarray
+
+    def polytopes(self) -> list[Polytope]:
+        return [Polytope(tuple(self.axes), np.asarray(self.vertices,
+                                                      np.float64))]
+
+
+@dataclass
+class Disk(Shape):
+    """2-D disk, approximated by a regular n-gon (convex, slicer-exact)."""
+
+    axes: Sequence[str]
+    center: Sequence[float]
+    radius: float | Sequence[float]
+    segments: int = 32
+
+    def polytopes(self) -> list[Polytope]:
+        r = self.radius
+        rx, ry = (r, r) if np.isscalar(r) else r
+        ang = 2 * np.pi * np.arange(self.segments) / self.segments
+        cx, cy = self.center
+        pts = np.stack([cx + rx * np.cos(ang), cy + ry * np.sin(ang)], -1)
+        return [Polytope(tuple(self.axes), pts)]
+
+
+@dataclass
+class Ellipsoid(Shape):
+    """3-D ellipsoid approximated by a convex point shell."""
+
+    axes: Sequence[str]
+    center: Sequence[float]
+    radii: Sequence[float]
+    rings: int = 8
+    segments: int = 16
+
+    def polytopes(self) -> list[Polytope]:
+        cx, cy, cz = self.center
+        rx, ry, rz = self.radii
+        pts = []
+        for i in range(1, self.rings):
+            phi = np.pi * i / self.rings
+            for j in range(self.segments):
+                th = 2 * np.pi * j / self.segments
+                pts.append([cx + rx * np.sin(phi) * np.cos(th),
+                            cy + ry * np.sin(phi) * np.sin(th),
+                            cz + rz * np.cos(phi)])
+        pts.append([cx, cy, cz + rz])
+        pts.append([cx, cy, cz - rz])
+        return [Polytope(tuple(self.axes), np.asarray(pts))]
+
+
+@dataclass
+class Polygon(Shape):
+    """Simple (possibly concave) 2-D polygon → convex triangles via
+    ear clipping.  This is how country shapes enter the slicer; the
+    paper's interface "is responsible for decomposing all user request
+    shapes into these base convex polytopes"."""
+
+    axes: Sequence[str]
+    points: np.ndarray  # (N, 2) boundary, any winding, not self-crossing
+
+    def polytopes(self) -> list[Polytope]:
+        tris = ear_clip(np.asarray(self.points, np.float64))
+        return [Polytope(tuple(self.axes), t, label="tri") for t in tris]
+
+
+@dataclass
+class Union(Shape):
+    """Union of sub-shapes on the same axes (paper Fig 8c)."""
+
+    shapes: Sequence[Shape]
+
+    def polytopes(self) -> list[Polytope]:
+        return [p for s in self.shapes for p in s.polytopes()]
+
+    def selects(self) -> list[Select]:
+        return [q for s in self.shapes for q in s.selects()]
+
+
+@dataclass
+class Path(Shape):
+    """Sweep a convex base shape along a polyline (flight path, MRI
+    vessel centreline).  Each segment's sweep is the convex hull of the
+    base placed at both endpoints — convex per segment, union overall."""
+
+    axes: Sequence[str]
+    base: Shape                     # shape on a subset/all of `axes`
+    waypoints: np.ndarray           # (K, len(axes)) polyline vertices
+
+    def polytopes(self) -> list[Polytope]:
+        wps = np.asarray(self.waypoints, np.float64)
+        base_polys = self.base.polytopes()
+        out = []
+        for bp in base_polys:
+            # embed base vertices into the full axis space (zero-padded on
+            # axes the base does not constrain)
+            D = len(self.axes)
+            emb = np.zeros((bp.n_vertices, D))
+            for j, ax in enumerate(bp.axes):
+                emb[:, self.axes.index(ax)] = bp.points[:, j]
+            for a, b in zip(wps[:-1], wps[1:]):
+                seg = np.concatenate([emb + a, emb + b], axis=0)
+                seg = convex_hull_prune(seg)
+                out.append(Polytope(tuple(self.axes), seg, label="sweep"))
+        return out
+
+
+@dataclass
+class Request:
+    """A full query: shapes over disjoint axis sets; their product is the
+    requested region.  Uncovered axes default to All."""
+
+    shapes: Sequence[Shape]
+
+    def polytopes(self) -> list[Polytope]:
+        return [p for s in self.shapes for p in s.polytopes()]
+
+    def selects(self) -> list[Select]:
+        return [q for s in self.shapes for q in s.selects()]
+
+    def covered_axes(self) -> set[str]:
+        axes: set[str] = set()
+        for p in self.polytopes():
+            axes |= set(p.axes)
+        for s in self.selects():
+            axes.add(s.axis)
+        return axes
+
+
+# ---------------------------------------------------------------------------
+def ear_clip(poly: np.ndarray) -> list[np.ndarray]:
+    """Triangulate a simple polygon (ear clipping, O(n^2))."""
+    pts = list(range(len(poly)))
+    if len(pts) < 3:
+        raise ValueError("polygon needs >= 3 points")
+    # enforce CCW
+    if _signed_area(poly) < 0:
+        pts = pts[::-1]
+    tris: list[np.ndarray] = []
+    guard = 0
+    while len(pts) > 3 and guard < 10 * len(poly) ** 2:
+        guard += 1
+        n = len(pts)
+        clipped = False
+        for i in range(n):
+            a, b, c = pts[(i - 1) % n], pts[i], pts[(i + 1) % n]
+            pa, pb, pc = poly[a], poly[b], poly[c]
+            if _cross(pb - pa, pc - pb) <= 1e-14:   # reflex or degenerate
+                continue
+            tri = np.array([pa, pb, pc])
+            if any(_point_in_tri(poly[q], tri) for q in pts
+                   if q not in (a, b, c)):
+                continue
+            tris.append(tri)
+            pts.pop(i)
+            clipped = True
+            break
+        if not clipped:     # numerically stuck: emit fan and stop
+            break
+    if len(pts) >= 3:
+        anchor = pts[0]
+        for i in range(1, len(pts) - 1):
+            tris.append(np.array([poly[anchor], poly[pts[i]],
+                                  poly[pts[i + 1]]]))
+    return tris
+
+
+def _signed_area(poly: np.ndarray) -> float:
+    x, y = poly[:, 0], poly[:, 1]
+    return 0.5 * float(np.sum(x * np.roll(y, -1) - np.roll(x, -1) * y))
+
+
+def _cross(u: np.ndarray, v: np.ndarray) -> float:
+    return float(u[0] * v[1] - u[1] * v[0])
+
+
+def _point_in_tri(p: np.ndarray, tri: np.ndarray) -> bool:
+    a, b, c = tri
+    d1 = _cross(b - a, p - a)
+    d2 = _cross(c - b, p - b)
+    d3 = _cross(a - c, p - c)
+    neg = (d1 < -1e-14) or (d2 < -1e-14) or (d3 < -1e-14)
+    pos = (d1 > 1e-14) or (d2 > 1e-14) or (d3 > 1e-14)
+    return not (neg and pos)

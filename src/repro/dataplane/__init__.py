@@ -1,0 +1,3 @@
+# Data plane: every data-access path is a Polytope extraction — plan the
+# exact indices first, then move only those bytes (DESIGN.md §2).
+from . import graph, pipeline, recsys, tokens, weather  # noqa: F401

@@ -1,0 +1,62 @@
+"""Mesh-axis context: lets model code place sharding constraints by
+axis *name* without importing mesh objects.
+
+Launchers (dryrun / train / serve) declare the active axis names once;
+``constrain`` then applies ``with_sharding_constraint`` only for axes
+that actually exist — the same model code runs unconstrained on a bare
+CPU, TP-only on a single pod, or DP×TP×pod on the full mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_AXES: ContextVar[tuple[str, ...]] = ContextVar("repro_mesh_axes",
+                                                default=())
+
+
+def set_mesh_axes(axes: tuple[str, ...]) -> None:
+    _AXES.set(tuple(axes))
+
+
+def mesh_axes() -> tuple[str, ...]:
+    return _AXES.get()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    token = _AXES.set(tuple(mesh.axis_names))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _AXES.reset(token)
+
+
+def _filter(entry, axes):
+    if entry is None:
+        return None
+    names = entry if isinstance(entry, tuple) else (entry,)
+    kept = tuple(n for n in names if n in axes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def constrain(x: jax.Array, *spec_dims) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec_dims)), dropping axis names
+    not present on the active mesh.  No-op without a mesh."""
+    axes = mesh_axes()
+    if not axes:
+        return x
+    dims = tuple(_filter(d, axes) for d in spec_dims)
+    if all(d is None for d in dims):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+DP = ("pod", "data")   # canonical batch-parallel axes

@@ -1,0 +1,14 @@
+# Pallas TPU kernels for the framework's compute hot spots.  Each
+# subpackage is <name>/{kernel.py, ops.py, ref.py}: pl.pallas_call with
+# explicit BlockSpec VMEM tiling, a jit'd dispatching wrapper, and the
+# pure-jnp oracle the tests assert against.
+#
+# gather     — exact-byte extraction gather + fused EmbeddingBag (the
+#              paper's I/O path on TPU: scalar-prefetch DMA of planned rows)
+# slice      — batched polytope-hyperplane slicing (one BFS layer of
+#              Algorithm 1 per launch)
+# paged_attn — decode attention reading only planner-named KV pages
+# segment    — segment-sum as one-hot MXU matmul (GNN / bag aggregation)
+from . import gather, paged_attn, segment, slice  # noqa: F401
+
+__all__ = ["gather", "paged_attn", "segment", "slice"]

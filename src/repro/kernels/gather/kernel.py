@@ -1,0 +1,111 @@
+"""Pallas TPU kernels for exact-byte extraction gathers.
+
+This is the paper's contribution mapped onto the TPU memory hierarchy
+(DESIGN.md §3): the Polytope planner has already computed *which* rows
+are needed; these kernels DMA exactly those rows HBM→VMEM using
+scalar-prefetched indices (`PrefetchScalarGridSpec`), never touching the
+rest of the datacube — the bounding-box baseline would stream the whole
+enclosing block.
+
+Two kernels:
+
+* ``gather_rows``     — (N, D) table × (M,) indices → (M, D).
+  Grid step ``i`` DMAs table row ``idx[i]``; the index map *is* the
+  extraction plan.
+* ``gather_rows_bag`` — fused EmbeddingBag: (B, L) padded index bags →
+  (B, D) segment-sum, accumulating over the L grid axis in the revisited
+  output block (TPU grids execute sequentially, so output revisiting is
+  the idiomatic reduction).
+
+Both use block shape (BLOCK_ROWS, D): D is the datacube's minor storage
+axis, so each DMA is one contiguous burst — the HBM analogue of the
+paper's coalesced byte-run reads (``ExtractionPlan.run_starts``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    # table_ref is the (1, D) row selected by the index map — the DMA
+    # already read exactly the planned bytes; just move it to the output.
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(table: jax.Array, indices: jax.Array,
+                interpret: bool = True) -> jax.Array:
+    """Gather ``table[indices]`` reading only the planned rows.
+
+    table   — (N, D)
+    indices — (M,) int32, each in [0, N)
+    """
+    n, d = table.shape
+    m = indices.shape[0]
+    indices = indices.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx: (idx[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), table.dtype),
+        interpret=interpret,
+        name="polytope_gather_rows",
+    )(indices, table)
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Padded slots carry index -1 → contribute zero.
+    valid = idx_ref[b, l] >= 0
+    row = table_ref[...]
+    out_ref[...] += jnp.where(valid, row, jnp.zeros_like(row))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_bag(table: jax.Array, bags: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """Fused EmbeddingBag(sum): out[b] = Σ_l table[bags[b, l]].
+
+    table — (N, D);  bags — (B, L) int32, padded with -1.
+    """
+    n, d = table.shape
+    b, l = bags.shape
+    bags32 = bags.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, l),
+        in_specs=[
+            # clamp -1 padding to row 0; the kernel masks it out.
+            pl.BlockSpec((1, d),
+                         lambda i, j, idx: (jnp.maximum(idx[i, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+        name="polytope_gather_bag",
+    )(bags32, table)

@@ -1,0 +1,42 @@
+"""Public jit'd entry points for extraction gathers.
+
+``use_pallas`` selects the Pallas kernel (interpret=True on CPU — the
+kernel body runs in Python for validation; on TPU pass
+``interpret=False``).  The default dispatch keeps the pure-jnp path for
+host-only runs so the whole framework works identically with or without
+the kernels — kernels are an optimisation layer, not a dependency.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def gather_rows(table: jax.Array, indices: jax.Array,
+                use_pallas: bool = False,
+                interpret: bool = True) -> jax.Array:
+    if use_pallas:
+        return kernel.gather_rows(table, indices, interpret=interpret)
+    return ref.gather_rows(table, indices)
+
+
+def gather_rows_bag(table: jax.Array, bags: jax.Array,
+                    use_pallas: bool = False,
+                    interpret: bool = True) -> jax.Array:
+    if use_pallas:
+        return kernel.gather_rows_bag(table, bags, interpret=interpret)
+    return ref.gather_rows_bag(table, bags)
+
+
+def gather_plan_rows(flat: jax.Array, offsets: jax.Array, row: int,
+                     use_pallas: bool = False) -> jax.Array:
+    """Extraction-plan adapter: gather `row`-sized blocks from a flat
+    datacube payload.  ``offsets`` are block-aligned element offsets from
+    :class:`repro.core.ExtractionPlan` (``run_starts`` coalesced to
+    ``row``-element blocks)."""
+    n = flat.shape[0] // row
+    table = flat[: n * row].reshape(n, row)
+    return gather_rows(table, offsets // row, use_pallas=use_pallas)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the gather kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows(table: jax.Array, indices: jax.Array) -> jax.Array:
+    return jnp.take(table, indices.astype(jnp.int32), axis=0)
+
+
+def gather_rows_bag(table: jax.Array, bags: jax.Array) -> jax.Array:
+    """EmbeddingBag(sum) with -1 padding."""
+    valid = (bags >= 0)[..., None]
+    rows = jnp.take(table, jnp.maximum(bags, 0).astype(jnp.int32), axis=0)
+    return jnp.sum(jnp.where(valid, rows, 0), axis=1).astype(table.dtype)

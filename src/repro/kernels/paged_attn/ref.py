@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for paged decode attention (GQA).
+
+Layouts:
+  q           — (B, H, Dh)        one new token per sequence
+  k_pages     — (NP, KVH, PS, Dh) global page pool
+  v_pages     — (NP, KVH, PS, Dh)
+  block_table — (B, PMAX) int32   page ids per sequence (-1 = unused)
+  seq_lens    — (B,)    int32     live KV length per sequence
+
+H = KVH * G (grouped-query attention).  The oracle materialises the
+gathered dense cache; the kernel never does — it reads only the pages
+the plan names (the paper's exact-byte promise applied to KV cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens):
+    b, h, dh = q.shape
+    np_, kvh, ps, _ = k_pages.shape
+    pmax = block_table.shape[1]
+    g = h // kvh
+
+    table = jnp.maximum(block_table, 0)                    # (B, PMAX)
+    k = k_pages[table]                                     # (B, PMAX, KVH, PS, Dh)
+    v = v_pages[table]
+    k = jnp.moveaxis(k, 2, 1).reshape(b, kvh, pmax * ps, dh)
+    v = jnp.moveaxis(v, 2, 1).reshape(b, kvh, pmax * ps, dh)
+
+    pos = jnp.arange(pmax * ps)[None, :]                   # (1, S)
+    mask = pos < seq_lens[:, None]                         # (B, S)
+
+    qg = q.reshape(b, kvh, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for tiled segment reduction."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(messages: jax.Array, segment_ids: jax.Array,
+                num_segments: int) -> jax.Array:
+    """out[s] = Σ_{e: seg[e]==s} messages[e].  seg<0 entries are dropped."""
+    valid = segment_ids >= 0
+    msg = jnp.where(valid[:, None], messages, 0)
+    seg = jnp.where(valid, segment_ids, 0)
+    return jax.ops.segment_sum(msg, seg, num_segments=num_segments)
+
+
+def segment_max(messages: jax.Array, segment_ids: jax.Array,
+                num_segments: int) -> jax.Array:
+    neg = jnp.full_like(messages, -jnp.inf)
+    valid = segment_ids >= 0
+    msg = jnp.where(valid[:, None], messages, neg)
+    seg = jnp.where(valid, segment_ids, 0)
+    out = jax.ops.segment_max(msg, seg, num_segments=num_segments)
+    return jnp.where(jnp.isfinite(out), out, 0.0)

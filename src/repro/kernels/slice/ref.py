@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for batched polytope-hyperplane slicing.
+
+Batched counterpart of :func:`repro.core.geometry.slice_vertices`: one
+BFS layer of Algorithm 1 slices *every* (polytope, plane) pair at once
+(DESIGN.md §3: "BFS layer = batch").
+
+Layout (fixed shapes — TPU needs static sizes):
+  verts  — (P, V, D) float32, padded vertices
+  valid  — (P, V)    bool, vertex validity
+  planes — (P,)      float32, slice plane position per polytope
+  k      — static int, axis being sliced
+
+Output: (P, V + V*V, D) candidate vertices + (P, V + V*V) validity.
+Slot layout: first V slots are "vertex on plane" hits; slot V + i*V + j
+is the interpolation between vertex i (below) and vertex j (above).
+Downstream (host hull-prune or mask-aware consumers) compacts.
+The sliced axis k keeps its coordinate (== plane) so D stays static;
+callers drop it when rebuilding Polytope objects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+PLANE_TOL = 1e-6
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def slice_batch(verts: jax.Array, valid: jax.Array, planes: jax.Array,
+                k: int) -> tuple[jax.Array, jax.Array]:
+    p, v, d = verts.shape
+    c = planes[:, None]                              # (P, 1)
+    coord = verts[:, :, k]                           # (P, V)
+    scale = jnp.maximum(1.0, jnp.max(jnp.abs(coord), axis=1, keepdims=True))
+    dist = jnp.where(valid, coord - c, jnp.inf)      # (P, V)
+
+    on = (jnp.abs(dist) <= PLANE_TOL * scale) & valid
+    below = (dist < -PLANE_TOL * scale) & valid
+    above = (dist > PLANE_TOL * scale) & jnp.isfinite(dist) & valid
+
+    # on-plane vertices, coordinate k snapped onto the plane
+    on_pts = verts.at[:, :, k].set(jnp.broadcast_to(c, (p, v)))
+
+    # all-pairs interpolation i(below) -> j(above)
+    di = jnp.where(below, dist, 0.0)[:, :, None]         # (P, V, 1)
+    dj = jnp.where(above, dist, 0.0)[:, None, :]         # (P, 1, V)
+    denom = di - dj
+    t = jnp.where(jnp.abs(denom) > 0, di / jnp.where(denom == 0, 1.0, denom),
+                  0.0)                                   # (P, V, V)
+    vi = verts[:, :, None, :]                            # (P, V, 1, D)
+    vj = verts[:, None, :, :]                            # (P, 1, V, D)
+    interp = vi + t[..., None] * (vj - vi)               # (P, V, V, D)
+    interp = interp.at[:, :, :, k].set(jnp.broadcast_to(c[:, :, None],
+                                                        (p, v, v)))
+    pair_valid = below[:, :, None] & above[:, None, :]   # (P, V, V)
+
+    out = jnp.concatenate([on_pts, interp.reshape(p, v * v, d)], axis=1)
+    out_valid = jnp.concatenate([on, pair_valid.reshape(p, v * v)], axis=1)
+    out = jnp.where(out_valid[..., None], out, 0.0)
+    return out, out_valid

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(*abstract_args).compile()
+on the production meshes — single-pod (16 data × 16 model = 256 chips)
+and multi-pod (2 pods × 256 = 512 chips) — using 512 placeholder host
+devices.  Nothing is allocated (ShapeDtypeStruct inputs); success plus
+``memory_analysis()`` proves the sharded program exists and fits.
+
+Per cell we record: per-device memory stats, cost_analysis FLOPs/bytes
+(XLA reports these per device post-SPMD), and the collective-op byte
+totals parsed from the optimized HLO — the inputs to EXPERIMENTS.md
+§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the optimized HLO."""
+    out = {c: {"bytes": 0, "count": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for coll in _COLLECTIVES:
+            # "%op = TYPE collective-name(" — start-instruction only
+            if f" {coll}(" in s and "=" in s:
+                lhs, rhs = s.split("=", 1)
+                type_part = rhs.strip().split(f" {coll}(")[0]
+                b = _shape_bytes(type_part)
+                out[coll]["bytes"] += b
+                out[coll]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool,
+             extra: dict | None = None, probe: str | None = None) -> dict:
+    arch = get_arch(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if probe:
+        low = arch.probes(shape, mesh)[probe]
+    else:
+        low = arch.lowering(shape, mesh)
+
+    from repro.distributed.sharding import sanitize_specs
+
+    def shardings(spec_tree, aval_tree):
+        spec_tree = sanitize_specs(spec_tree, aval_tree, mesh)
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else
+            (s if s is None else NamedSharding(mesh, s)),
+            spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+    in_shardings = tuple(shardings(s, a) for s, a in
+                         zip(low.in_specs, low.args))
+    from repro.distributed.context import mesh_context
+    with mesh_context(mesh):
+        jitted = jax.jit(low.fn, in_shardings=in_shardings,
+                         donate_argnums=low.donate)
+        lowered = jitted.lower(*low.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+
+    rec = {
+        "arch": arch_id, "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": int(mesh.devices.size),
+        "kind": low.kind,
+        "probe": probe,
+        "correction": (arch.correction() if (arch.correction and
+                                             not probe) else None),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(
+                cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": colls,
+    }
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already recorded in --out")
+    ap.add_argument("--probes", action="store_true",
+                    help="also run the unrolled cost probes (single-pod)")
+    args = ap.parse_args()
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results: dict[str, dict] = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    if args.all:
+        cells = []
+        for aid in ARCH_IDS:
+            arch = get_arch(aid)
+            for shape in arch.shapes:
+                cells.append((aid, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_fail = 0
+
+    def one(key, aid, shape, mp, probe=None):
+        nonlocal n_fail
+        if args.resume and results.get(key, {}).get("ok"):
+            print(f"[skip] {key}", flush=True)
+            return
+        print(f"[dryrun] {key} ...", flush=True)
+        try:
+            rec = run_cell(aid, shape, mp, probe=probe)
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"flops/dev={rec['cost']['flops_per_device']:.3e} "
+                  f"coll={rec['collectives']['total_bytes']:.3e}B",
+                  flush=True)
+            print(f"  memory/dev: args="
+                  f"{rec['memory']['argument_bytes']/2**30:.2f}GiB "
+                  f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB",
+                  flush=True)
+        except Exception as e:
+            rec = {"arch": aid, "shape": shape, "probe": probe,
+                   "mesh": "pod2x16x16" if mp else "pod16x16",
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            n_fail += 1
+            print(f"  FAIL: {rec['error'][:200]}", flush=True)
+        results[key] = rec
+        out_path.write_text(json.dumps(results, indent=1))
+
+    for aid, shape in cells:
+        for mp in meshes:
+            key = f"{aid}|{shape}|{'mp' if mp else 'sp'}"
+            one(key, aid, shape, mp)
+        if args.probes and get_arch(aid).probes is not None:
+            mesh = make_production_mesh()
+            for pname in get_arch(aid).probes(shape, mesh):
+                one(f"{aid}|{shape}|sp|probe:{pname}", aid, shape,
+                    False, probe=pname)
+    print(f"done: {len(cells) * len(meshes)} cells, {n_fail} failures",
+          flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

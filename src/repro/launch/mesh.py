@@ -1,0 +1,45 @@
+"""Production meshes.
+
+TPU v5e pod = 16 × 16 = 256 chips; multi-pod adds an outer "pod" axis
+(data-parallel across DCI).  ``make_production_mesh`` is a function —
+importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
+    """Small meshes for tests / CPU smoke runs."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def initialize_distributed() -> None:
+    """Multi-host bring-up (real cluster entrypoint).
+
+    On a real TPU pod each host calls this before any jax op; the
+    coordinator address comes from the launch scripts
+    (``launch/scripts/launch_pod.sh``).  On a single host it is a no-op.
+    """
+    import os
+
+    if os.environ.get("REPRO_COORDINATOR"):
+        jax.distributed.initialize(
+            coordinator_address=os.environ["REPRO_COORDINATOR"],
+            num_processes=int(os.environ.get("REPRO_NUM_PROCESSES", "1")),
+            process_id=int(os.environ.get("REPRO_PROCESS_ID", "0")))

@@ -1,0 +1,1 @@
+from . import attention, layers, moe, nequip, recsys, transformer  # noqa: F401

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN (DeepSeek-V3 / Arctic style).
+
+Routing: top-k softmax gates + GShard capacity dispatch.  The dispatch
+is scatter/gather based (position-in-expert via cumsum over the token
+axis), *not* the one-hot einsum formulation — the einsum dispatch costs
+O(T·E·C·D) FLOPs and would swamp the roofline's compute term with
+routing overhead; scatter keeps dispatch O(T·k·D).
+
+Expert parallelism: expert-major weight tensors (E, D, F) shard E over
+the mesh's ``model`` axis (16 experts/shard for DeepSeek-V3 on a 16-way
+axis).  Activations enter replicated across ``model``; GSPMD partitions
+the grouped GEMM over E and all-reduces the combine — the paper-faithful
+baseline.  (Hillclimb: shard_map all-to-all dispatch, see EXPERIMENTS
+§Perf.)
+
+Aux losses: switch load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+
+from .layers import dense_init
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                     # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0             # always-on shared experts (DeepSeek)
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-4
+    # GShard grouping: routing/capacity are computed per group so the
+    # dispatch buffers (G, E, C, D) shard over (data, model) instead of
+    # materialising a global (E, C_global, D).  Must divide B·S.
+    n_groups: int = 1
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(kr, d, e, jnp.float32)["w"],
+        "w_gate": (jax.random.normal(k1, (e, d, f)) * s).astype(dtype),
+        "w_up": (jax.random.normal(k2, (e, d, f)) * s).astype(dtype),
+        "w_down": (jax.random.normal(k3, (e, f, d)) /
+                   math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = {
+            "w_gate": (jax.random.normal(ks, (d, cfg.n_shared * f)) * s
+                       ).astype(dtype),
+            "w_up": (jax.random.normal(k1, (d, cfg.n_shared * f)) * s
+                     ).astype(dtype),
+            "w_down": (jax.random.normal(k2, (cfg.n_shared * f, d)) /
+                       math.sqrt(f)).astype(dtype),
+        }
+    return p
+
+
+def moe_ffn(params: Params, cfg: MoEConfig, x: jax.Array,
+            dropless: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) → (out, aux_loss).
+
+    ``dropless=True`` sizes each expert buffer to hold every token
+    (capacity = T) — used on the decode path, where T = batch is tiny
+    and token dropping would perturb generation."""
+    b, s, d = x.shape
+    t = b * s
+    g = min(cfg.n_groups, t)
+    if t % g:
+        g = 1
+    xg = x.reshape(g, t // g, d)
+    out, aux = jax.vmap(
+        lambda xt: _moe_group(params, cfg, xt, dropless))(xg)
+    return out.reshape(b, s, d), jnp.mean(aux)
+
+
+def _moe_group(params: Params, cfg: MoEConfig, xt: jax.Array,
+               dropless: bool) -> tuple[jax.Array, jax.Array]:
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = (xt.astype(jnp.float32) @ params["router"])     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    capacity = t if dropless else max(1, int(cfg.capacity_factor * t * k
+                                             / e))
+
+    # position of each (token, choice) within its expert buffer
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - 1)           # (T·k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1)             # (T·k,)
+    eid = expert_ids.reshape(t * k)
+    keep = pos < capacity                                    # drop overflow
+
+    # dispatch: expert_in[e, c] = x[token routed to (e, c)]
+    xk = jnp.repeat(xt, k, axis=0)                           # (T·k, D)
+    safe_pos = jnp.where(keep, pos, capacity - 1)
+    expert_in = jnp.zeros((e, capacity, d), xt.dtype)
+    expert_in = expert_in.at[eid, safe_pos].add(
+        jnp.where(keep[:, None], xk, 0).astype(xt.dtype))
+    # Dispatch stays local to the token's data shard: E is *replicated*
+    # here.  (§Perf iteration 2 tried E-sharding this buffer — SPMD
+    # answered with a bigger forward all-gather; refuted, see
+    # EXPERIMENTS.md.)  The grouped GEMM slices E locally from the
+    # model-sharded weights; the combine is the scatter-add above.
+    expert_in = constrain(expert_in, None, None, None)
+
+    # grouped GEMM over experts (E sharded over `model`)
+    h = jnp.einsum("ecd,edf->ecf", expert_in,
+                   params["w_gate"].astype(xt.dtype))
+    u = jnp.einsum("ecd,edf->ecf", expert_in,
+                   params["w_up"].astype(xt.dtype))
+    h = jax.nn.silu(h) * u
+    expert_out = jnp.einsum("ecf,efd->ecd", h,
+                            params["w_down"].astype(xt.dtype))
+
+    # Combine as a scatter-add (EXPERIMENTS.md §Perf iteration 1).
+    # A gather `expert_out[eid, pos]` would force SPMD to replicate the
+    # (E, C, D) buffer — an 18.8 GB all-gather per DeepSeek layer.  The
+    # scatter formulation keeps expert_out E-sharded: SPMD lowers it to
+    # local-scatter + all-reduce of the (T, D) output (the embedding-
+    # gradient pattern), moving T·D bytes instead of E·C·D.
+    gates = gate_vals.astype(jnp.float32).reshape(t * k)
+    eid_safe = jnp.where(keep, eid, e)        # dropped slots → OOB → drop
+    gate_slot = jnp.zeros((e, capacity), jnp.float32)
+    gate_slot = gate_slot.at[eid_safe, safe_pos].add(gates, mode="drop")
+    tok_of_slot = jnp.full((e, capacity), t, jnp.int32)      # t = dummy
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    tok_of_slot = tok_of_slot.at[eid_safe, safe_pos].set(
+        tok.astype(jnp.int32), mode="drop")
+    weighted = expert_out * gate_slot[..., None].astype(xt.dtype)
+    out = jnp.zeros((t + 1, d), xt.dtype)
+    out = out.at[tok_of_slot.reshape(-1)].add(
+        weighted.reshape(e * capacity, d), mode="drop")
+    out = out[:t]
+
+    if cfg.n_shared:
+        sh = params["shared"]
+        g = xt @ sh["w_gate"].astype(xt.dtype)
+        uu = xt @ sh["w_up"].astype(xt.dtype)
+        out = out + (jax.nn.silu(g) * uu) @ sh["w_down"].astype(xt.dtype)
+
+    # aux losses (f32)
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], e), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    lb_loss = e * jnp.sum(density * router_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = cfg.aux_loss_weight * lb_loss + cfg.z_loss_weight * z_loss
+    return out, aux

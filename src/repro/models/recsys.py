@@ -1,0 +1,281 @@
+"""RecSys architectures: DLRM, DeepFM, two-tower retrieval, BERT4Rec.
+
+The embedding lookup is the hot path (kernel taxonomy §RecSys) and it
+*is* the paper's algorithm: a categorical-axis extraction on the
+(row, dim) table datacube — plan the rows, read only those bytes.
+``EmbeddingBag`` below is exactly ``repro.kernels.gather.gather_rows_bag``
+semantics (take + segment-sum with -1 padding); tables shard row-wise
+over the mesh's ``model`` axis.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cross_entropy, embedding_init, mlp, mlp_init
+from .transformer import TransformerConfig, forward as tf_forward, \
+    init_params as tf_init
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag — the extraction engine's categorical path as an NN module
+# ---------------------------------------------------------------------------
+def embedding_bag_init(key, n_tables: int, rows: int, dim: int,
+                       dtype=jnp.float32) -> Params:
+    """One stacked table tensor (T, rows, dim) — row-sharded over `model`."""
+    scale = 1.0 / math.sqrt(dim)
+    return {"tables": (jax.random.normal(key, (n_tables, rows, dim))
+                       * scale).astype(dtype)}
+
+
+def embedding_bag(params: Params, bags: jax.Array,
+                  combine: str = "sum") -> jax.Array:
+    """bags (B, T, L) int32 with -1 padding → (B, T, dim).
+
+    take + masked segment-sum over the bag axis — JAX has no native
+    EmbeddingBag; this IS the system's implementation (and matches the
+    Pallas ``gather_rows_bag`` kernel bit-for-bit).
+    """
+    tables = params["tables"]                 # (T, R, D)
+    valid = (bags >= 0)
+    idx = jnp.maximum(bags, 0)
+    # per-table gather: rows[b, t, l, d] = tables[t, bags[b,t,l], d]
+    rows = _gather_tables(tables, idx)
+    rows = jnp.where(valid[..., None], rows, 0)
+    out = jnp.sum(rows, axis=2)
+    if combine == "mean":
+        out = out / jnp.maximum(jnp.sum(valid, axis=2), 1)[..., None]
+    return out
+
+
+def _gather_tables(tables: jax.Array, idx: jax.Array) -> jax.Array:
+    """tables (T,R,D), idx (B,T,L) → (B,T,L,D) via per-table take."""
+    def one(table, ids):                      # (R,D), (B,L)
+        return jnp.take(table, ids, axis=0)   # (B,L,D)
+
+    out = jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables,
+                                                    idx)  # (B,T,L,D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DLRM (RM-2)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    rows: int = 1_000_000
+    embed_dim: int = 64
+    bot_mlp: tuple[int, ...] = (512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 512, 256, 1)
+    bag_size: int = 1
+    dtype: Any = jnp.float32
+
+
+def dlrm_init(key, cfg: DLRMConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "bags": embedding_bag_init(k1, cfg.n_sparse, cfg.rows,
+                                   cfg.embed_dim, cfg.dtype),
+        "bot": mlp_init(k2, [cfg.n_dense, *cfg.bot_mlp], cfg.dtype),
+        "top": mlp_init(k3, [cfg.embed_dim +
+                             (cfg.n_sparse + 1) * cfg.n_sparse // 2,
+                             *cfg.top_mlp], cfg.dtype),
+    }
+
+
+def dlrm_forward(params: Params, cfg: DLRMConfig, dense: jax.Array,
+                 bags: jax.Array) -> jax.Array:
+    """dense (B, n_dense), bags (B, n_sparse, L) → logits (B,)."""
+    d = mlp(params["bot"], dense.astype(cfg.dtype))        # (B, D)
+    e = embedding_bag(params["bags"], bags)                # (B, T, D)
+    z = jnp.concatenate([d[:, None, :], e], axis=1)        # (B, T+1, D)
+    inter = jnp.einsum("bid,bjd->bij", z, z)               # dot interaction
+    iu, ju = jnp.triu_indices(z.shape[1], k=1)
+    flat = inter[:, iu, ju]                                # (B, pairs)
+    x = jnp.concatenate([d, flat], axis=1)
+    return mlp(params["top"], x)[:, 0]
+
+
+def dlrm_loss(params: Params, cfg: DLRMConfig, batch: dict) -> jax.Array:
+    logits = dlrm_forward(params, cfg, batch["dense"], batch["bags"])
+    return _bce(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# DeepFM
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_sparse: int = 39
+    rows: int = 1_000_000
+    embed_dim: int = 10
+    mlp_dims: tuple[int, ...] = (400, 400, 400)
+    dtype: Any = jnp.float32
+
+
+def deepfm_init(key, cfg: DeepFMConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "bags": embedding_bag_init(k1, cfg.n_sparse, cfg.rows,
+                                   cfg.embed_dim, cfg.dtype),
+        "linear": embedding_bag_init(k2, cfg.n_sparse, cfg.rows, 1,
+                                     cfg.dtype),
+        "deep": mlp_init(k3, [cfg.n_sparse * cfg.embed_dim,
+                              *cfg.mlp_dims, 1], cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def deepfm_forward(params: Params, cfg: DeepFMConfig,
+                   bags: jax.Array) -> jax.Array:
+    """bags (B, n_sparse, L) → logits (B,)."""
+    v = embedding_bag(params["bags"], bags)                # (B, F, D)
+    lin = embedding_bag(params["linear"], bags)[..., 0]    # (B, F)
+    # FM second-order: ½[(Σv)² − Σv²]
+    s = jnp.sum(v, axis=1)
+    fm = 0.5 * jnp.sum(jnp.square(s) - jnp.sum(jnp.square(v), axis=1),
+                       axis=-1)
+    deep = mlp(params["deep"], v.reshape(v.shape[0], -1))[:, 0]
+    return params["bias"] + jnp.sum(lin, axis=1) + fm + deep
+
+
+def deepfm_loss(params: Params, cfg: DeepFMConfig, batch: dict) -> jax.Array:
+    return _bce(deepfm_forward(params, cfg, batch["bags"]),
+                batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_users: int = 1_000_000
+    n_items: int = 1_000_000
+    embed_dim: int = 256
+    tower: tuple[int, ...] = (1024, 512, 256)
+    temperature: float = 0.05
+    dtype: Any = jnp.float32
+
+
+def twotower_init(key, cfg: TwoTowerConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "user_embed": embedding_init(k1, cfg.n_users, cfg.embed_dim,
+                                     cfg.dtype),
+        "item_embed": embedding_init(k2, cfg.n_items, cfg.embed_dim,
+                                     cfg.dtype),
+        "user_tower": mlp_init(k3, [cfg.embed_dim, *cfg.tower], cfg.dtype),
+        "item_tower": mlp_init(k4, [cfg.embed_dim, *cfg.tower], cfg.dtype),
+    }
+
+
+def _l2n(x):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_user(params, cfg, user_ids):
+    u = jnp.take(params["user_embed"]["table"], user_ids, axis=0)
+    return _l2n(mlp(params["user_tower"], u.astype(cfg.dtype)))
+
+
+def twotower_item(params, cfg, item_ids):
+    i = jnp.take(params["item_embed"]["table"], item_ids, axis=0)
+    return _l2n(mlp(params["item_tower"], i.astype(cfg.dtype)))
+
+
+def twotower_loss(params: Params, cfg: TwoTowerConfig,
+                  batch: dict) -> jax.Array:
+    """In-batch sampled softmax with logQ correction [Yi et al. '19]."""
+    u = twotower_user(params, cfg, batch["user_ids"])      # (B, D)
+    i = twotower_item(params, cfg, batch["item_ids"])      # (B, D)
+    logits = (u @ i.T) / cfg.temperature                   # (B, B)
+    logq = batch.get("item_logq")
+    if logq is not None:
+        logits = logits - logq[None, :]
+    labels = jnp.arange(u.shape[0])
+    return cross_entropy(logits, labels)
+
+
+def twotower_score_candidates(params: Params, cfg: TwoTowerConfig,
+                              user_ids: jax.Array,
+                              cand_item_ids: jax.Array) -> jax.Array:
+    """retrieval_cand shape: one query × 10⁶ candidates = one sharded
+    matvec (no loop)."""
+    u = twotower_user(params, cfg, user_ids)               # (B, D)
+    c = twotower_item(params, cfg, cand_item_ids)          # (N, D)
+    return u @ c.T                                         # (B, N)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec — bidirectional transformer over item sequences
+# ---------------------------------------------------------------------------
+def bert4rec_config(n_items: int = 50_000, seq_len: int = 200,
+                    dtype=jnp.float32) -> TransformerConfig:
+    return TransformerConfig(
+        name="bert4rec", vocab=n_items + 2,     # +mask, +pad tokens
+        d_model=64, n_layers=2, n_heads=2, n_kv_heads=2, d_head=32,
+        d_ff=256, causal=False, learned_pos=True, max_seq=seq_len,
+        dtype=dtype, q_chunk=None)
+
+
+def bert4rec_init(key, cfg: TransformerConfig) -> Params:
+    return tf_init(key, cfg)
+
+
+MAX_MASKED = 48   # cloze positions kept per sequence (0.2 × 200 + slack)
+
+
+def bert4rec_loss(params: Params, cfg: TransformerConfig,
+                  batch: dict) -> jax.Array:
+    """Masked-item prediction (cloze) over the item vocabulary.
+
+    §Perf: the paper-faithful formulation materialises (B, S, V) logits
+    — 3.8 TB at the assigned train_batch.  The exact-bytes fix computes
+    hidden states once, *gathers only the masked positions* (≤ 48 of
+    200) and runs an online-logsumexp CE over vocabulary chunks, never
+    materialising the (…, 2²⁰) logit tensor.
+    """
+    from repro.models.layers import cross_entropy_tied_chunked
+    from repro.models.transformer import trunk
+
+    h, _ = trunk(params, cfg, batch["items"])            # (B, S, D)
+    mask = batch["mask"]
+    # top-MAX_MASKED masked positions per row (ties broken by position)
+    order = jnp.argsort(-mask, axis=1, stable=True)[:, :MAX_MASKED]
+    h_m = jnp.take_along_axis(h, order[..., None], axis=1)
+    lab_m = jnp.take_along_axis(batch["labels"], order, axis=1)
+    w_m = jnp.take_along_axis(mask, order, axis=1)
+    return cross_entropy_tied_chunked(
+        h_m, params["embed"]["table"], lab_m, w_m, chunk=4096)
+
+
+def bert4rec_score(params: Params, cfg: TransformerConfig,
+                   items: jax.Array) -> jax.Array:
+    """Next-item scores at the last position (serving).
+
+    §Perf: unembed only the final position — (B, V) instead of
+    (B, S, V), a 200× cut in serve_bulk's memory term."""
+    from repro.models.layers import unembed
+    from repro.models.transformer import trunk
+
+    h, _ = trunk(params, cfg, items)
+    return unembed(params["embed"], h[:, -1])
+
+
+def _bce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))

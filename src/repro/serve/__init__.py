@@ -1,0 +1,1 @@
+from . import engine, kv_cache  # noqa: F401

@@ -1,0 +1,119 @@
+"""Serving engine: continuous batching over the paged KV cache.
+
+Request lifecycle: queue → prefill (fills the sequence's pages) →
+decode rounds (batched across live sequences, one token each) →
+completion (pages released).  Admission is capacity-based: a request is
+admitted when the page pool can hold its prompt + max_new_tokens —
+deadlock-free by construction.
+
+This engine drives the dense-cache ``decode_step`` for simplicity on
+CPU tests; on TPU the attention inner loop is
+``repro.kernels.paged_attn`` consuming the planner's block tables.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+
+from .kv_cache import PagedKVCache
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    rid: int = field(default_factory=itertools.count().__next__)
+    out_tokens: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    page_size: int = 16
+    n_pages: int = 512
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, params: Any, cfg: tf.TransformerConfig,
+                 ecfg: EngineConfig):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.pager = PagedKVCache(
+            ecfg.n_pages, ecfg.page_size,
+            max_pages_per_seq=ecfg.max_seq // ecfg.page_size)
+        self.queue: list[Request] = []
+        self.live: dict[int, dict] = {}      # rid → {cache, pos, req}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tf.decode_step(p, cfg, c, t, pos))
+
+    # -- API -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> list[Request]:
+        done: list[Request] = []
+        while self.queue or self.live:
+            self._admit()
+            self._decode_round()
+            done.extend(self._collect())
+        return done
+
+    # -- internals ---------------------------------------------------------
+    def _admit(self) -> None:
+        while self.queue and len(self.live) < self.ecfg.max_batch:
+            req = self.queue[0]
+            total = len(req.prompt) + req.max_new_tokens
+            pages_needed = (total + self.ecfg.page_size - 1) \
+                // self.ecfg.page_size
+            if pages_needed > len(self.pager.free_pages):
+                break                        # admission control
+            self.queue.pop(0)
+            self.pager.allocate(req.rid, len(req.prompt))
+            prompt = jnp.asarray(req.prompt[None, :])
+            logits, cache = tf.prefill(self.params, self.cfg, prompt,
+                                       max_seq=self.ecfg.max_seq)
+            nxt = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(nxt)
+            self.pager.extend(req.rid)
+            self.live[req.rid] = {"cache": cache, "req": req,
+                                  "pos": len(req.prompt)}
+
+    def _decode_round(self) -> None:
+        if not self.live:
+            return
+        # continuous batching: one decode step per live sequence, each
+        # against its own cache (batched per-sequence for CPU clarity;
+        # the TPU path batches through the paged kernel)
+        for rid, entry in list(self.live.items()):
+            req = entry["req"]
+            token = jnp.asarray([req.out_tokens[-1]], dtype=jnp.int32)
+            pos = jnp.asarray([entry["pos"]], dtype=jnp.int32)
+            logits, cache = self._decode(self.params, entry["cache"],
+                                         token, pos)
+            nxt = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(nxt)
+            self.pager.extend(rid)
+            entry["cache"] = cache
+            entry["pos"] += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+
+    def _collect(self) -> list[Request]:
+        done = []
+        for rid in [r for r, e in self.live.items()
+                    if e["req"].done]:
+            self.pager.release(rid)
+            done.append(self.live.pop(rid)["req"])
+        return done

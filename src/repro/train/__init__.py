@@ -1,0 +1,1 @@
+from . import checkpoint, fault, optimizer, train_state  # noqa: F401

@@ -1,0 +1,165 @@
+"""Optimizers from scratch: AdamW and Adafactor (+ schedules, clipping).
+
+Adafactor (factored second moments) is what makes 671B-parameter MoE
+training states fit: state per (…, R, C) matrix is R + C floats instead
+of R·C.  Both optimizers are pure pytree transforms; ZeRO-style state
+sharding comes from ``repro.distributed.sharding.opt_state_specs``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"               # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # adafactor
+    decay_rate: float = 0.8
+    epsilon1: float = 1e-30
+    epsilon2: float = 1e-3
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# -- AdamW -----------------------------------------------------------------
+def adamw_init(params: Params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptimizerConfig, grads: Params, state: dict,
+                 params: Params) -> tuple[Params, dict, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# -- Adafactor ----------------------------------------------------------------
+def adafactor_init(params: Params) -> dict:
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(factored, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads: Params, state: dict,
+                     params: Params) -> tuple[Params, dict, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(p, g, f):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.epsilon1
+        if p.ndim >= 2:
+            vr = beta2 * f["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * f["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True), cfg.epsilon1)
+            upd_ = g32 / (jnp.sqrt(rfac)[..., None] *
+                          jnp.sqrt(vc)[..., None, :] + cfg.epsilon2)
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * f["v"] + (1 - beta2) * g2
+            upd_ = g32 / (jnp.sqrt(v) + cfg.epsilon2)
+            newf = {"v": v}
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-30)
+        upd_ = upd_ / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), newf
+
+    out = jax.tree_util.tree_map(
+        upd, params, grads, state["f"],
+        is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+    # out is a tree of (param, state) tuples at the param leaves
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_f = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"f": new_f, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.kind == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if cfg.kind == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(cfg, g, s, p)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,86 @@
+import numpy as np
+import pytest
+
+from repro.core import CategoricalAxis, CyclicAxis, OrderedAxis
+
+
+class TestOrderedAxis:
+    def test_range_inclusive(self):
+        ax = OrderedAxis("x", np.arange(10.0))
+        pos, vals = ax.indices_in_range(2.0, 5.0)
+        np.testing.assert_array_equal(pos, [2, 3, 4, 5])
+
+    def test_irregular_sparse(self):
+        ax = OrderedAxis("x", [0.0, 0.1, 5.0, 7.5, 100.0])
+        pos, vals = ax.indices_in_range(0.05, 8.0)
+        np.testing.assert_array_equal(vals, [0.1, 5.0, 7.5])
+
+    def test_unsorted_storage_order(self):
+        ax = OrderedAxis("lat", [90.0, 45.0, 0.0, -45.0, -90.0])
+        pos, vals = ax.indices_in_range(-50.0, 50.0)
+        # positions are storage positions
+        assert set(pos.tolist()) == {1, 2, 3}
+        np.testing.assert_array_equal(np.sort(vals), [-45.0, 0.0, 45.0])
+
+    def test_datetime_axis(self):
+        times = np.arange("2026-01-01", "2026-01-11", dtype="datetime64[D]")
+        ax = OrderedAxis("time", times)
+        lo = ax.to_float(np.datetime64("2026-01-03"))
+        hi = ax.to_float(np.datetime64("2026-01-05"))
+        pos, _ = ax.indices_in_range(lo, hi)
+        assert len(pos) == 3
+
+    def test_boundary_tolerance(self):
+        ax = OrderedAxis("x", np.arange(100.0))
+        pos, _ = ax.indices_in_range(10.0 - 1e-12, 20.0 + 1e-12)
+        assert len(pos) == 11
+
+    def test_nearest(self):
+        ax = OrderedAxis("x", [0.0, 1.0, 10.0])
+        assert ax.nearest(2.0) == (1, 1.0)
+        assert ax.nearest(9.0) == (2, 10.0)
+
+
+class TestCyclicAxis:
+    def test_plain_range(self):
+        ax = CyclicAxis("lon", np.arange(0.0, 360.0, 30.0), period=360.0)
+        pos, vals = ax.indices_in_range(60.0, 150.0)
+        np.testing.assert_array_equal(vals, [60., 90., 120., 150.])
+
+    def test_wrap_negative(self):
+        ax = CyclicAxis("lon", np.arange(0.0, 360.0, 30.0), period=360.0)
+        pos, vals = ax.indices_in_range(-40.0, 40.0)
+        assert set(pos.tolist()) == {11, 0, 1}          # 330, 0, 30
+        np.testing.assert_array_equal(np.sort(vals), [-30., 0., 30.])
+
+    def test_wrap_above(self):
+        ax = CyclicAxis("lon", np.arange(0.0, 360.0, 30.0), period=360.0)
+        pos, vals = ax.indices_in_range(330.0, 390.0)
+        assert set(pos.tolist()) == {11, 0, 1}
+
+    def test_full_circle(self):
+        ax = CyclicAxis("lon", np.arange(0.0, 360.0, 30.0), period=360.0)
+        pos, _ = ax.indices_in_range(-1000.0, 1000.0)
+        assert len(pos) == 12
+        assert len(set(pos.tolist())) == 12
+
+    def test_no_duplicate_positions(self):
+        ax = CyclicAxis("lon", np.arange(0.0, 360.0, 30.0), period=360.0)
+        pos, _ = ax.indices_in_range(-360.0, 359.0)
+        assert len(pos) == len(set(pos.tolist()))
+
+
+class TestCategoricalAxis:
+    def test_find(self):
+        ax = CategoricalAxis("param", ["t2m", "u10", "v10"])
+        assert ax.find("u10") == 1
+        assert ax.find("nope") is None
+
+    def test_duplicate_labels_raise(self):
+        with pytest.raises(ValueError):
+            CategoricalAxis("p", ["a", "a"])
+
+    def test_len_and_values(self):
+        ax = CategoricalAxis("p", ["a", "b"])
+        assert len(ax) == 2
+        assert ax.values == ["a", "b"]

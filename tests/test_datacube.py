@@ -1,0 +1,142 @@
+import numpy as np
+import pytest
+
+from repro.core import (BoundingBoxExtractor, Box, BranchingDatacube,
+                        CategoricalAxis, Disk, OctahedralGridDatacube,
+                        OrderedAxis, Polygon, PolytopeExtractor, Request,
+                        Select, Slicer, Span, TensorDatacube,
+                        TraditionalExtractor, gather)
+
+
+class TestTensorDatacube:
+    def test_strides_and_offsets(self):
+        axes = [OrderedAxis(n, np.arange(k, dtype=float))
+                for n, k in [("a", 3), ("b", 4), ("c", 5)]]
+        cube = TensorDatacube(axes)
+        assert cube.n_elements == 60
+        assert cube.base_offset({"a": 1, "b": 2, "c": 3}) == 20 + 10 + 3
+
+    def test_extraction_matches_numpy(self):
+        axes = [OrderedAxis(n, np.arange(6.0)) for n in "ab"]
+        cube = TensorDatacube(axes)
+        data = np.arange(36.0)
+        res = PolytopeExtractor(cube).extract(
+            Request([Box(("a", "b"), [1, 1], [3, 4])]), data)
+        np.testing.assert_array_equal(
+            np.sort(res.values),
+            np.sort(data.reshape(6, 6)[1:4, 1:5].ravel()))
+
+
+class TestOctahedralGrid:
+    def test_o1280_field_size_matches_paper(self):
+        # Table 1: one field is "50.4 MB" — O1280 @ float64.
+        cube = OctahedralGridDatacube([], n=1280)
+        assert cube.points_per_field == 6_599_680
+        assert abs(cube.field_nbytes() / 2**20 - 50.35) < 0.1
+
+    def test_row_structure(self):
+        cube = OctahedralGridDatacube([], n=8)
+        assert cube.row_counts[0] == 20
+        assert cube.row_counts[7] == 20 + 4 * 7
+        assert cube.row_counts[8] == 20 + 4 * 7   # mirror
+        assert cube.points_per_field == cube.row_counts.sum()
+
+    def test_offsets_unique_and_in_range(self):
+        t = OrderedAxis("time", np.arange(3.0))
+        cube = OctahedralGridDatacube([t], n=16)
+        req = Request([Span("time", 0.0, 2.0),
+                       Disk(("lat", "lon"), (30.0, 180.0), 20.0)])
+        plan, _ = Slicer(cube).extract_plan(req)
+        assert plan.n_points > 0
+        assert len(set(plan.offsets.tolist())) == plan.n_points
+        assert plan.offsets.min() >= 0
+        assert plan.offsets.max() < cube.n_elements
+
+    def test_imbalance_more_points_near_equator(self):
+        cube = OctahedralGridDatacube([], n=64)
+        eq = Request([Disk(("lat", "lon"), (0.0, 180.0), 10.0)])
+        pole = Request([Disk(("lat", "lon"), (80.0, 180.0), 10.0)])
+        peq, _ = Slicer(cube).extract_plan(eq)
+        ppo, _ = Slicer(cube).extract_plan(pole)
+        # the non-regular grid puts more longitudes near the equator
+        assert peq.n_points > ppo.n_points
+
+    def test_values_roundtrip(self):
+        cube = OctahedralGridDatacube([], n=16)
+        data = np.arange(cube.n_elements, dtype=np.float64)
+        res = PolytopeExtractor(cube).extract(
+            Request([Disk(("lat", "lon"), (0.0, 0.0), 15.0)]), data)
+        np.testing.assert_array_equal(np.sort(res.values),
+                                      np.sort(res.plan.offsets))
+
+
+class TestBranchingDatacube:
+    def _cube(self):
+        cub_a = TensorDatacube(
+            [OrderedAxis(n, np.arange(4.0)) for n in ("x", "y", "z")])
+        cub_b = TensorDatacube(
+            [OrderedAxis(n, np.arange(2.0)) for n in ("u", "v")])
+        return BranchingDatacube("p", {"val4": cub_a, "val5": cub_b})
+
+    def test_child_offsets_disjoint(self):
+        cube = self._cube()
+        assert cube.n_elements == 64 + 4
+        r5 = Request([Select("p", ["val5"]), Box(("u", "v"), [0, 0], [1, 1])])
+        plan, _ = Slicer(cube).extract_plan(r5)
+        assert set(plan.offsets.tolist()) == {64, 65, 66, 67}
+
+    def test_nonregular_axes_per_branch(self):
+        cube = self._cube()
+        both = Request([Select("p", ["val4", "val5"]),
+                        Box(("x", "y", "z"), [0, 0, 0], [0, 0, 1]),
+                        Box(("u", "v"), [0, 0], [0, 1])])
+        plan, _ = Slicer(cube).extract_plan(both)
+        assert set(plan.offsets.tolist()) == {0, 1, 64, 65}
+
+
+class TestBaselines:
+    def test_bbox_superset_of_polytope(self):
+        cube = TensorDatacube(
+            [OrderedAxis(n, np.arange(20.0)) for n in ("x", "y")])
+        req = Request([Disk(("x", "y"), (10.0, 10.0), 6.0)])
+        ppoly, _ = PolytopeExtractor(cube).plan(req)
+        pbox = BoundingBoxExtractor(cube).plan(req)
+        assert set(ppoly.offsets.tolist()) <= set(pbox.offsets.tolist())
+        assert pbox.nbytes >= ppoly.nbytes
+
+    def test_reduction_factor_ordering(self):
+        # paper Table 1: traditional >= bbox >= polytope, strictly for
+        # non-orthogonal shapes.
+        t = OrderedAxis("time", np.arange(8.0))
+        cube = OctahedralGridDatacube([t], n=32)
+        req = Request([Select("time", [3.0]),
+                       Polygon(("lat", "lon"),
+                               np.array([[40, 0], [55, 10], [50, 25],
+                                         [35, 15]], float))])
+        ppoly, _ = PolytopeExtractor(cube).plan(req)
+        pbox = BoundingBoxExtractor(cube).plan(req)
+        trad = TraditionalExtractor(cube).nbytes(req)
+        assert trad >= pbox.nbytes >= ppoly.nbytes
+        assert pbox.nbytes > ppoly.nbytes  # non-orthogonal shape
+
+    def test_box_request_polytope_equals_bbox(self):
+        # paper Table 1 rows 1-3: for orthogonal shapes the two match.
+        cube = TensorDatacube(
+            [OrderedAxis(n, np.arange(30.0)) for n in ("x", "y")])
+        req = Request([Box(("x", "y"), [3, 4], [10, 22])])
+        ppoly, _ = PolytopeExtractor(cube).plan(req)
+        pbox = BoundingBoxExtractor(cube).plan(req)
+        assert ppoly.nbytes == pbox.nbytes
+
+
+class TestGatherDevice:
+    def test_jnp_gather(self):
+        import jax.numpy as jnp
+
+        cube = TensorDatacube(
+            [OrderedAxis(n, np.arange(10.0)) for n in ("x", "y")])
+        data = jnp.arange(100.0)
+        res = PolytopeExtractor(cube).extract(
+            Request([Disk(("x", "y"), (5.0, 5.0), 3.0)]), data)
+        np.testing.assert_array_equal(np.sort(np.asarray(res.values)),
+                                      np.sort(res.plan.offsets))

@@ -1,0 +1,133 @@
+import numpy as np
+import pytest
+
+from repro.core import (Polytope, box_polytope, convex_hull_prune,
+                        regular_polygon, slice_vertices)
+
+
+class TestSliceVertices:
+    def test_square_slice_middle(self):
+        pts = np.array([[0., 0.], [4., 0.], [0., 4.], [4., 4.]])
+        out = slice_vertices(pts, 0, 2.0)
+        assert out is not None
+        ys = np.sort(out[:, 0])
+        np.testing.assert_allclose(ys[[0, -1]], [0.0, 4.0])
+
+    def test_miss_returns_none(self):
+        pts = np.array([[0., 0.], [1., 0.], [0., 1.]])
+        assert slice_vertices(pts, 0, 5.0) is None
+        assert slice_vertices(pts, 0, -5.0) is None
+
+    def test_touch_vertex(self):
+        pts = np.array([[0., 0.], [1., 0.], [0., 1.]])
+        out = slice_vertices(pts, 0, 1.0)
+        assert out is not None
+        np.testing.assert_allclose(out, [[0.0]])
+
+    def test_tetrahedron_mid_slice_is_triangle(self):
+        pts = np.array([[0., 0., 0.], [2., 0., 0.], [0., 2., 0.],
+                        [0., 0., 2.]])
+        out = slice_vertices(pts, 2, 1.0)
+        out = convex_hull_prune(out)
+        assert len(out) == 3  # triangle cross-section
+
+    def test_interpolation_exact(self):
+        pts = np.array([[0., 10.], [4., 30.]])
+        out = slice_vertices(pts, 0, 1.0)
+        np.testing.assert_allclose(out, [[15.0]])
+
+
+class TestPolytope:
+    def test_dedupe_on_init(self):
+        p = Polytope(("x", "y"), np.array([[0., 0.], [0., 0.], [1., 1.]]))
+        assert p.n_vertices == 2
+
+    def test_extents(self):
+        p = box_polytope(["x", "y"], [1., 2.], [3., 5.])
+        assert p.extents("x") == (1., 3.)
+        assert p.extents("y") == (2., 5.)
+
+    def test_slice_drops_axis(self):
+        p = box_polytope(["x", "y", "z"], [0., 0., 0.], [1., 1., 1.])
+        s = p.slice_at("y", 0.5)
+        assert s.axes == ("x", "z")
+        assert s.ndim == 2
+
+    def test_slice_to_zero_dim(self):
+        p = Polytope(("x",), np.array([[0.], [2.]]))
+        s = p.slice_at("x", 1.0)
+        assert s.axes == ()
+
+    def test_contains_lp_oracle(self):
+        p = box_polytope(["x", "y"], [0., 0.], [2., 2.])
+        assert p.contains([1., 1.])
+        assert p.contains([0., 0.])
+        assert not p.contains([3., 1.])
+
+    def test_bad_shape_raises(self):
+        with pytest.raises(ValueError):
+            Polytope(("x",), np.zeros((3, 2)))
+
+
+class TestHullPrune:
+    def test_interior_point_removed(self):
+        pts = np.array([[0., 0.], [4., 0.], [0., 4.], [4., 4.], [2., 2.]])
+        out = convex_hull_prune(pts)
+        assert len(out) == 4
+        assert not any((out == [2., 2.]).all(1))
+
+    def test_collinear_degenerate(self):
+        pts = np.array([[0., 0.], [1., 1.], [2., 2.], [3., 3.]])
+        out = convex_hull_prune(pts)
+        assert len(out) == 2
+
+    def test_1d(self):
+        out = convex_hull_prune(np.array([[3.], [1.], [7.], [5.]]))
+        np.testing.assert_allclose(sorted(out[:, 0]), [1., 7.])
+
+    def test_quadratic_growth_suppressed(self):
+        # paper §3.2: without pruning, vertex count grows quadratically.
+        p = box_polytope(list("abcde"), [0.] * 5, [3.] * 5)
+        cur = p
+        for ax in "abcd":
+            cur = cur.slice_at(ax, 1.5)
+        assert cur.n_vertices <= 4  # 1-D remnant: 2 after pruning
+
+
+class TestShapeFactories:
+    def test_box_corners(self):
+        p = box_polytope(["a", "b", "c"], [0.] * 3, [1.] * 3)
+        assert p.n_vertices == 8
+
+    def test_regular_polygon(self):
+        p = regular_polygon(["x", "y"], (0., 0.), 2.0, n=8)
+        assert p.n_vertices == 8
+        r = np.linalg.norm(p.points, axis=1)
+        np.testing.assert_allclose(r, 2.0)
+
+
+class TestHullRegressions:
+    def test_subnormal_coordinates_keep_hull_vertices(self):
+        """hypothesis-found: an absolute epsilon in the 2-D monotone
+        chain dropped true hull vertices when coordinates were
+        subnormal (≈1e-75), losing interior datacube points."""
+        import numpy as np
+
+        from repro.core import (ConvexPolytope, OrderedAxis, Request,
+                                Slicer, TensorDatacube)
+
+        verts = np.array([
+            [7.3, 1.0, -1.83000034e-74, 0.0],
+            [0.0, 7.3, 0.0, 0.0],
+            [0.0, 0.0, 7.3, 0.0],
+            [0.0, 0.0, 0.0, 7.3],
+            [0.0, 0.0, 0.0, 0.0],
+            [2.0, 0.0, 0.0, 0.0]])
+        names = ("ax0", "ax1", "ax2", "ax3")
+        cube = TensorDatacube(
+            [OrderedAxis(n, np.arange(10.0)) for n in names])
+        plan, _ = Slicer(cube).extract_plan(
+            Request([ConvexPolytope(names, verts)]))
+        got = set(map(tuple,
+                      np.stack([plan.coords[a] for a in names], -1)))
+        assert (1.0, 2.0, 1.0, 1.0) in got

@@ -1,0 +1,178 @@
+"""Model-level invariants beyond the smoke tests: equivariance,
+decode/prefill consistency, chunked-CE equivalence, MoE semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (cross_entropy, cross_entropy_tied_chunked)
+from repro.models.moe import MoEConfig, moe_ffn, moe_init
+from repro.models.nequip import (NequIPConfig, gaunt, nequip_energy_forces,
+                                 nequip_forward, nequip_init, sph_harm_np,
+                                 tp_paths)
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      forward, init_params, prefill)
+
+settings.register_profile("models", deadline=None, max_examples=15)
+settings.load_profile("models")
+
+
+class TestGaunt:
+    def test_orthonormality_of_sh(self):
+        # ∫ Y_lm Y_l'm' Y_00 dΩ = δ δ / (2√π)
+        for l in (0, 1, 2):
+            g = gaunt(l, l, 0)
+            np.testing.assert_allclose(
+                g[:, :, 0], np.eye(2 * l + 1) / (2 * np.sqrt(np.pi)),
+                atol=1e-10)
+
+    def test_parity_selection_rule(self):
+        # odd total l vanishes
+        assert np.abs(gaunt(0, 1, 0)).max() < 1e-12
+        assert np.abs(gaunt(1, 2, 2)).max() < 1e-12
+
+    def test_symmetry_under_argument_swap(self):
+        g12 = gaunt(1, 2, 1)
+        g21 = gaunt(2, 1, 1)
+        np.testing.assert_allclose(g12, np.swapaxes(g21, 0, 1),
+                                   atol=1e-12)
+
+
+class TestEquivariance:
+    def _setup(self, readout, n_out):
+        cfg = NequIPConfig(n_layers=2, channels=8, d_feat=4,
+                           n_out=n_out, readout=readout)
+        params = nequip_init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        n, e = 16, 48
+        pos = jnp.asarray(rng.uniform(0, 4, (n, 3)), jnp.float32)
+        feat = jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)
+        ei = jnp.asarray(rng.integers(0, n, (2, e)), jnp.int32)
+        return cfg, params, pos, feat, ei
+
+    @given(seed=st.integers(0, 100))
+    def test_rotation_invariance_of_scalars(self, seed):
+        from scipy.spatial.transform import Rotation
+
+        cfg, params, pos, feat, ei = self._setup("node_class", 3)
+        R = jnp.asarray(Rotation.random(
+            random_state=seed).as_matrix(), jnp.float32)
+        out = nequip_forward(params, cfg, feat, pos, ei)
+        out_r = nequip_forward(params, cfg, feat, pos @ R.T, ei)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                                   atol=5e-3)
+
+    def test_force_equivariance(self):
+        from scipy.spatial.transform import Rotation
+
+        cfg, params, pos, feat, ei = self._setup("energy", 1)
+        R = jnp.asarray(Rotation.random(random_state=3).as_matrix(),
+                        jnp.float32)
+        e1, f1 = nequip_energy_forces(params, cfg, feat, pos, ei)
+        e2, f2 = nequip_energy_forces(params, cfg, feat, pos @ R.T, ei)
+        np.testing.assert_allclose(float(e1[0]), float(e2[0]), atol=5e-3)
+        np.testing.assert_allclose(np.asarray(f1 @ R.T), np.asarray(f2),
+                                   atol=5e-3)
+
+    def test_translation_invariance(self):
+        cfg, params, pos, feat, ei = self._setup("node_class", 3)
+        out = nequip_forward(params, cfg, feat, pos, ei)
+        out_t = nequip_forward(params, cfg, feat, pos + 7.3, ei)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_t),
+                                   atol=1e-4)
+
+
+class TestChunkedCE:
+    @given(v=st.integers(10, 200), chunk=st.integers(3, 64),
+           seed=st.integers(0, 1000))
+    def test_matches_dense(self, v, chunk, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        h = jax.random.normal(k1, (3, 5, 8))
+        table = jax.random.normal(k2, (v, 8)) * 0.3
+        labels = jax.random.randint(k3, (3, 5), 0, v)
+        dense = cross_entropy(h @ table.T, labels)
+        chunked = cross_entropy_tied_chunked(h, table, labels,
+                                             chunk=chunk)
+        np.testing.assert_allclose(float(dense), float(chunked),
+                                   rtol=1e-4)
+
+    def test_gradients_match(self):
+        key = jax.random.PRNGKey(0)
+        h = jax.random.normal(key, (2, 4, 8))
+        table = jax.random.normal(jax.random.PRNGKey(1), (50, 8))
+        labels = jax.random.randint(key, (2, 4), 0, 50)
+        g1 = jax.grad(lambda t: cross_entropy(h @ t.T, labels))(table)
+        g2 = jax.grad(lambda t: cross_entropy_tied_chunked(
+            h, t, labels, chunk=7))(table)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-3, atol=1e-5)
+
+
+class TestMoE:
+    def test_gates_sum_to_one_reconstruction(self):
+        """With 1 expert, MoE == that expert's FFN exactly."""
+        cfg = MoEConfig(d_model=8, d_ff=16, n_experts=1, top_k=1,
+                        capacity_factor=4.0)
+        p = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 8))
+        out, _ = moe_ffn(p, cfg, x)
+        xt = x.reshape(8, 8)
+        ref = (jax.nn.silu(xt @ p["w_gate"][0]) * (xt @ p["w_up"][0])
+               ) @ p["w_down"][0]
+        np.testing.assert_allclose(np.asarray(out.reshape(8, 8)),
+                                   np.asarray(ref), rtol=2e-5,
+                                   atol=2e-5)
+
+    def test_capacity_drops_tokens(self):
+        cfg = MoEConfig(d_model=8, d_ff=16, n_experts=2, top_k=1,
+                        capacity_factor=0.1)
+        p = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 8))
+        out, _ = moe_ffn(p, cfg, x)
+        # capacity = max(1, .1*32/2)=1 → at most 2 tokens routed
+        nonzero = jnp.sum(jnp.any(out[0] != 0, axis=-1))
+        assert int(nonzero) <= 4
+
+    def test_dropless_keeps_all(self):
+        cfg = MoEConfig(d_model=8, d_ff=16, n_experts=2, top_k=1,
+                        capacity_factor=0.1)
+        p = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 8))
+        out, _ = moe_ffn(p, cfg, x, dropless=True)
+        nonzero = jnp.sum(jnp.any(out[0] != 0, axis=-1))
+        assert int(nonzero) == 32
+
+
+class TestDecodeConsistency:
+    @pytest.mark.parametrize("attn", ["gqa", "mla"])
+    def test_greedy_continuation_matches_forward(self, attn):
+        if attn == "mla":
+            cfg = TransformerConfig(
+                name="t", vocab=64, d_model=32, n_layers=2, n_heads=4,
+                n_kv_heads=4, d_head=8, d_ff=64, attn_type="mla",
+                q_lora_rank=16, kv_lora_rank=16, qk_nope_dim=8,
+                qk_rope_dim=4, v_head_dim=8, q_chunk=None)
+        else:
+            cfg = TransformerConfig(
+                name="t", vocab=64, d_model=32, n_layers=2, n_heads=4,
+                n_kv_heads=2, d_head=8, d_ff=64, q_chunk=None)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 64)
+        lg, cache = prefill(params, cfg, toks, max_seq=20)
+        seq = toks
+        pos = 12
+        for _ in range(4):
+            nxt = jnp.argmax(lg, -1)
+            seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+            full_logits, _ = forward(params, cfg, seq)
+            lg, cache = decode_step(params, cfg, cache, nxt,
+                                    jnp.full((2,), pos))
+            np.testing.assert_allclose(
+                np.asarray(lg), np.asarray(full_logits[:, -1]),
+                rtol=5e-4, atol=5e-4)
+            pos += 1

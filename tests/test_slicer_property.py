@@ -1,0 +1,177 @@
+"""Property tests: the slicer's output must equal brute-force membership.
+
+This is the system's central invariant — the paper's promise is that the
+index tree contains *exactly* the datacube points inside the requested
+polytope ("ensures that users get back all the points that are contained
+in the shape they requested").
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Box, ConvexPolytope, CyclicAxis, Disk, OrderedAxis,
+                        Polygon, Request, Select, Slicer, TensorDatacube,
+                        Union)
+from repro.core.hull import convex_hull_prune
+
+settings.register_profile("repro", deadline=None, max_examples=30)
+settings.load_profile("repro")
+
+
+def brute_force_membership(grid_axes, vertices, tol=1e-9):
+    """All grid points inside hull(vertices), via qhull halfspaces."""
+    from scipy.spatial import ConvexHull
+
+    hull = ConvexHull(vertices, qhull_options="QJ")
+    mesh = np.meshgrid(*grid_axes, indexing="ij")
+    pts = np.stack([m.ravel() for m in mesh], -1)
+    A, b = hull.equations[:, :-1], hull.equations[:, -1]
+    inside = np.all(pts @ A.T + b <= tol, axis=1)
+    return {tuple(p) for p in pts[inside]}
+
+
+def extract_set(plan, axis_names):
+    if plan.n_points == 0:
+        return set()
+    cols = [plan.coords[a] for a in axis_names]
+    return set(map(tuple, np.stack(cols, -1)))
+
+
+@st.composite
+def convex_polytope_nd(draw, ndim):
+    n_pts = draw(st.integers(ndim + 1, ndim + 5))
+    pts = draw(st.lists(
+        st.lists(st.floats(-2.0, 12.0, allow_nan=False), min_size=ndim,
+                 max_size=ndim),
+        min_size=n_pts, max_size=n_pts))
+    arr = np.asarray(pts)
+    # need full-dimensional hull for the brute-force oracle
+    if np.linalg.matrix_rank(arr - arr.mean(0)) < ndim:
+        arr = arr + np.eye(ndim + 5)[: len(arr), :ndim] * 7.3
+    return arr
+
+
+@pytest.mark.parametrize("ndim", [2, 3, 4])
+@given(data=st.data())
+def test_random_convex_polytope_exact(ndim, data):
+    verts = data.draw(convex_polytope_nd(ndim))
+    names = [f"ax{i}" for i in range(ndim)]
+    axes = [OrderedAxis(n, np.arange(10.0)) for n in names]
+    cube = TensorDatacube(axes)
+    plan, _ = Slicer(cube).extract_plan(
+        Request([ConvexPolytope(tuple(names), verts)]))
+    got = extract_set(plan, names)
+    exp = brute_force_membership([np.arange(10.0)] * ndim,
+                                 convex_hull_prune(verts))
+    # Tolerance-boundary points may differ by qhull's joggle; allow only
+    # boundary-distance discrepancies.
+    sym = got ^ exp
+    for p in sym:
+        from scipy.spatial import ConvexHull
+        hull = ConvexHull(convex_hull_prune(verts), qhull_options="QJ")
+        A, b = hull.equations[:, :-1], hull.equations[:, -1]
+        margin = np.max(np.asarray(p) @ A.T + b)
+        assert abs(margin) < 1e-6, (p, margin, "non-boundary mismatch")
+
+
+@given(lo=st.lists(st.integers(0, 8), min_size=3, max_size=3),
+       width=st.lists(st.integers(0, 6), min_size=3, max_size=3))
+def test_box_equals_numpy_slicing(lo, width):
+    names = ["a", "b", "c"]
+    cube = TensorDatacube([OrderedAxis(n, np.arange(12.0)) for n in names])
+    lows = np.array(lo, float)
+    highs = np.minimum(lows + width, 11.0)
+    plan, _ = Slicer(cube).extract_plan(
+        Request([Box(names, lows, highs)]))
+    data = np.arange(12 ** 3, dtype=np.float64)
+    got = np.sort(data[plan.offsets])
+    ref = data.reshape(12, 12, 12)[
+        int(lows[0]):int(highs[0]) + 1,
+        int(lows[1]):int(highs[1]) + 1,
+        int(lows[2]):int(highs[2]) + 1].ravel()
+    np.testing.assert_array_equal(got, np.sort(ref))
+
+
+@given(n1=st.integers(1, 6), n2=st.integers(1, 6), n3=st.integers(1, 6))
+def test_slice_count_bound(n1, n2, n3):
+    """Paper §5.2:  N_slices <= sum_i prod_{j<=i} n_j  (equality for boxes)."""
+    names = ["a", "b", "c"]
+    cube = TensorDatacube([OrderedAxis(n, np.arange(10.0)) for n in names])
+    plan, stats = Slicer(cube).extract_plan(
+        Request([Box(names, [0., 0., 0.],
+                     [n1 - 1.0, n2 - 1.0, n3 - 1.0])]))
+    bound = n1 + n1 * n2 + n1 * n2 * n3
+    assert stats.n_slices <= bound
+    assert plan.n_points == n1 * n2 * n3
+
+
+@given(cx=st.floats(-180.0, 540.0), r=st.floats(1.0, 40.0))
+def test_cyclic_disk_wraps(cx, r):
+    lon = CyclicAxis("lon", np.arange(0.0, 360.0, 10.0), period=360.0)
+    lat = OrderedAxis("lat", np.arange(-80.0, 81.0, 10.0))
+    cube = TensorDatacube([lat, lon])
+    plan, _ = Slicer(cube).extract_plan(
+        Request([Disk(("lat", "lon"), (0.0, cx), r, segments=64)]))
+    got = {(la, lo % 360.0) for la, lo in
+           zip(plan.coords.get("lat", []), plan.coords.get("lon", []))}
+    exp = set()
+    poly_r_min = r * np.cos(np.pi / 64)  # inscribed polygon radius
+    for la in np.arange(-80.0, 81.0, 10.0):
+        for lo in np.arange(0.0, 360.0, 10.0):
+            d = abs(lo - cx % 360.0)
+            d = min(d, 360.0 - d)
+            rr = np.hypot(la, d)
+            if rr <= poly_r_min - 1e-6:
+                exp.add((la, lo))
+    # polygonised disk: everything strictly inside the inscribed circle
+    # must be found; nothing outside the circumscribed circle may appear.
+    assert exp <= got
+    for la, lo in got:
+        d = abs(lo - cx % 360.0)
+        d = min(d, 360.0 - d)
+        assert np.hypot(la, d) <= r + 1e-6
+
+
+@given(seed=st.integers(0, 10_000))
+def test_union_merges_duplicates(seed):
+    rng = np.random.default_rng(seed)
+    names = ["x", "y"]
+    cube = TensorDatacube([OrderedAxis(n, np.arange(15.0)) for n in names])
+    b1 = rng.uniform(0, 7, 2)
+    b2 = rng.uniform(0, 7, 2)
+    s1 = Box(names, b1, b1 + rng.uniform(1, 7, 2))
+    s2 = Box(names, b2, b2 + rng.uniform(1, 7, 2))
+    pu, _ = Slicer(cube).extract_plan(Request([Union([s1, s2])]))
+    p1, _ = Slicer(cube).extract_plan(Request([s1]))
+    p2, _ = Slicer(cube).extract_plan(Request([s2]))
+    assert set(pu.offsets.tolist()) == (set(p1.offsets.tolist()) |
+                                        set(p2.offsets.tolist()))
+    assert len(pu.offsets) == len(set(pu.offsets.tolist()))
+
+
+@given(seed=st.integers(0, 10_000))
+def test_runs_partition_offsets(seed):
+    rng = np.random.default_rng(seed)
+    names = ["x", "y", "z"]
+    cube = TensorDatacube([OrderedAxis(n, np.arange(8.0)) for n in names])
+    verts = rng.uniform(-1, 9, (6, 3))
+    plan, _ = Slicer(cube).extract_plan(
+        Request([ConvexPolytope(names, verts)]))
+    assert plan.run_lengths.sum() == plan.n_points
+    rebuilt = np.concatenate([np.arange(s, s + l) for s, l in
+                              zip(plan.run_starts, plan.run_lengths)]) \
+        if plan.n_runs else np.empty(0, np.int64)
+    np.testing.assert_array_equal(np.sort(rebuilt), np.sort(plan.offsets))
+
+
+def test_polygon_concave_exact():
+    cube = TensorDatacube([OrderedAxis(n, np.arange(10.0)) for n in "xy"])
+    L = Polygon(("x", "y"),
+                np.array([[0, 0], [6, 0], [6, 2], [2, 2], [2, 6], [0, 6]],
+                         float))
+    plan, _ = Slicer(cube).extract_plan(Request([L]))
+    got = set(zip(plan.coords["x"], plan.coords["y"]))
+    exp = {(i, j) for i in range(7) for j in range(7)
+           if (i <= 6 and j <= 2) or (i <= 2 and j <= 6)}
+    assert got == exp
