@@ -57,6 +57,13 @@ def run_kernels() -> None:
         _emit(r["name"], r["us_per_call"], r["derived"])
 
 
+def run_plancache() -> None:
+    from . import bench_plan_cache as bpc
+
+    for r in bpc.bench():
+        _emit(r["name"], r["us_per_call"], r["derived"])
+
+
 def run_roofline() -> None:
     import os
 
@@ -79,6 +86,7 @@ TARGETS = {
     "fig8": run_fig8,
     "table1": lambda full=False: run_table1(full),
     "kernels": run_kernels,
+    "plancache": run_plancache,
     "roofline": run_roofline,
 }
 
@@ -101,6 +109,7 @@ def main() -> None:
     # default to the paper's O1280 resolution — the headline numbers
     run_table1(True)
     run_kernels()
+    run_plancache()
     run_roofline()
 
 

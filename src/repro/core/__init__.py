@@ -11,8 +11,9 @@ from .extractor import (BoundingBoxExtractor, ExtractResult,
 from .geometry import Polytope, box_polytope, regular_polygon, slice_vertices
 from .hull import convex_hull_prune
 from .index_tree import ExtractionPlan, IndexNode, coalesce_runs, flatten
-from .shapes import (All, Box, ConvexPolytope, Disk, Ellipsoid, Path, Point,
-                     Polygon, Request, Select, Shape, Span, Union, ear_clip)
+from .shapes import (CANON_TOL, All, Box, ConvexPolytope, Disk, Ellipsoid,
+                     Path, Point, Polygon, Request, Select, Shape, Span,
+                     Union, canonical_hash, canonical_key, ear_clip)
 from .slicer import Slicer, SliceStats
 
 __all__ = [
@@ -25,5 +26,5 @@ __all__ = [
     "flatten", "All", "Box", "ConvexPolytope", "Disk", "Ellipsoid", "Path",
     "Point", "Polygon", "Request", "Select", "Shape", "Span", "Union",
     "ear_clip", "Slicer", "SliceStats", "batched_extract_2d",
-    "batched_plan_2d",
+    "batched_plan_2d", "CANON_TOL", "canonical_hash", "canonical_key",
 ]

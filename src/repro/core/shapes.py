@@ -17,6 +17,7 @@ possible Polytope requests".
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
@@ -25,6 +26,63 @@ import numpy as np
 from .geometry import Polytope, box_polytope, regular_polygon
 from .hull import convex_hull_prune
 
+# Quantum for canonical-form coordinate quantization (DESIGN.md §4).
+# Matches the order of geometry.PLANE_TOL: two vertices closer than this
+# land on the same grid cell and hash identically — datacube index
+# spacing is always far coarser, so colliding requests select the same
+# bytes.
+CANON_TOL = 1e-9
+
+
+def _quantize(arr: np.ndarray, tol: float) -> np.ndarray:
+    """Snap coordinates to a grid of size ``tol`` (normalising -0.0)."""
+    q = np.round(np.asarray(arr, np.float64) / tol) * tol
+    return q + 0.0
+
+
+def _canon_value(v: Any, tol: float) -> tuple[str, str]:
+    """Order-stable key for a Select value of any hashable type."""
+    if isinstance(v, (bool, str, bytes)):
+        return (type(v).__name__, repr(v))
+    if isinstance(v, (int, float, np.integer, np.floating)):
+        # ints and equal floats must collide (axis.find treats 5 == 5.0)
+        return ("f", repr(float(_quantize(np.array(float(v)), tol))))
+    return (type(v).__name__, repr(v))
+
+
+def canonical_key(polys: Sequence[Polytope], selects: Sequence["Select"],
+                  tol: float = CANON_TOL) -> tuple:
+    """Canonical form of a (polytopes, selects) decomposition.
+
+    Order-insensitive: union members and selects are sorted sets, select
+    values are merged per axis (the slicer unions them anyway), and
+    vertex coordinates are quantized to ``tol`` so float noise below the
+    index spacing cannot split equivalent requests.  Exact duplicates
+    (repeated union members, repeated select values) collapse — they
+    produce the same plan.
+    """
+    poly_keys: set[tuple] = set()
+    for p in polys:
+        pts = _quantize(p.points, tol)
+        rows = tuple(sorted(set(map(tuple, pts.tolist()))))
+        poly_keys.add((tuple(p.axes), rows))
+    sel_vals: dict[str, set] = {}
+    for s in selects:
+        bucket = sel_vals.setdefault(s.axis, set())
+        for v in s.values:
+            bucket.add(_canon_value(v, tol))
+    sel_keys = tuple(sorted(
+        (ax, tuple(sorted(vals))) for ax, vals in sel_vals.items()))
+    return (tuple(sorted(poly_keys)), sel_keys)
+
+
+def canonical_hash(polys: Sequence[Polytope], selects: Sequence["Select"],
+                   tol: float = CANON_TOL) -> str:
+    """Stable content hash of :func:`canonical_key` (process-independent:
+    sha256 over the repr of nested tuples of strings/floats)."""
+    key = canonical_key(polys, selects, tol)
+    return hashlib.sha256(repr(key).encode()).hexdigest()
+
 
 class Shape:
     def polytopes(self) -> list[Polytope]:
@@ -32,6 +90,13 @@ class Shape:
 
     def selects(self) -> list["Select"]:
         return []
+
+    def canonical_key(self, tol: float = CANON_TOL) -> tuple:
+        """Canonical form of this shape's primitive decomposition."""
+        return canonical_key(self.polytopes(), self.selects(), tol)
+
+    def canonical_hash(self, tol: float = CANON_TOL) -> str:
+        return canonical_hash(self.polytopes(), self.selects(), tol)
 
 
 @dataclass
@@ -224,6 +289,32 @@ class Request:
         for s in self.selects():
             axes.add(s.axis)
         return axes
+
+    def canonical_form(self, tol: float = CANON_TOL) -> tuple:
+        """Order-insensitive, tolerance-quantized canonical form.
+
+        Two requests with equal canonical forms select the same datacube
+        bytes (same primitive decomposition up to member order, select
+        order/duplication, and sub-``tol`` coordinate noise), so their
+        extraction plans are interchangeable — the plan cache's key
+        (DESIGN.md §4).
+        """
+        return canonical_key(self.polytopes(), self.selects(), tol)
+
+    def canonical_hash(self, tol: float = CANON_TOL) -> str:
+        """Stable sha256 content hash of :meth:`canonical_form`.
+
+        Memoized per Request object (decomposition — e.g. ear-clipping a
+        country polygon — dominates the hash cost; a served request is
+        hashed exactly once).  Mutating ``shapes`` after the first call
+        is not supported.
+        """
+        cache = self.__dict__.setdefault("_canon_hashes", {})
+        h = cache.get(tol)
+        if h is None:
+            h = canonical_hash(self.polytopes(), self.selects(), tol)
+            cache[tol] = h
+        return h
 
 
 # ---------------------------------------------------------------------------

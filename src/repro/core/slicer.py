@@ -49,8 +49,15 @@ class SliceStats:
     total_time_s: float = 0.0              # full Algorithm-1 walltime
 
     def record_slice(self, dim: int, dt: float) -> None:
-        self.n_slices += 1
-        self.n_slices_by_dim[dim] = self.n_slices_by_dim.get(dim, 0) + 1
+        self.record_slices(dim, 1, dt)
+
+    def record_slices(self, dim: int, n: int, dt: float) -> None:
+        """Bulk recorder — the single entry point for every slicing path
+        (per-index, shared-box, vector-leaf), so ``n_slices`` and
+        ``n_slices_by_dim`` always agree and the §5.2 bound
+        ``N_slices ≤ Σ_i Π_{j≤i} n_j`` holds by construction."""
+        self.n_slices += n
+        self.n_slices_by_dim[dim] = self.n_slices_by_dim.get(dim, 0) + n
         self.slicing_time_s += dt
 
 
@@ -112,11 +119,19 @@ class Slicer:
             # Implicit All — every label (paper: existence check only).
             wanted = list(enumerate(axis.values))
         else:
+            # Dedupe by position: the same label twice (within or across
+            # Selects) must enqueue ONE frontier item — duplicates would
+            # expand the whole subtree below this node twice (the index
+            # tree merges them, so the plan was right but the work and
+            # slice counts silently doubled).
             wanted = []
+            seen: set[int] = set()
             for sel in mine:
                 for v in sel.values:
                     pos = axis.find(v)
-                    if pos is not None:  # silently skip absent labels
+                    if pos is not None and pos not in seen:
+                        # (absent labels are silently skipped)
+                        seen.add(pos)
                         wanted.append((pos, v))
         for pos, v in wanted:
             child = item.node.child(axis_name, pos, v)
@@ -176,23 +191,24 @@ class Slicer:
             # emitted as one array block (counted, not materialised).
             item.node.add_leaf_block(axis_name, pos, vals)
             if poly is not None:
-                stats.n_slices += len(pos)
-                stats.n_slices_by_dim[1] = (
-                    stats.n_slices_by_dim.get(1, 0) + len(pos))
+                stats.record_slices(1, len(pos), 0.0)
             return
 
         # Axis-aligned boxes slice to the same sub-box at every index
         # inside their extent — compute it once and share (turns O(points)
         # box slicing into O(nodes); boxes match the bbox baseline cost).
+        # Count only when the shared slice exists: if the probe misses
+        # (probe value pushed outside the box by the index-lookup
+        # tolerance), the per-index path below does — and counts — the
+        # slicing instead.
         shared_box = None
         if poly is not None and poly.is_box and poly.ndim > 1:
             t0 = time.perf_counter()
             shared_box = poly.slice_at(axis_name,
                                        float(vals[len(vals) // 2]))
-            stats.record_slice(poly.ndim, time.perf_counter() - t0)
-            stats.n_slices += len(pos) - 1
-            stats.n_slices_by_dim[poly.ndim] = \
-                stats.n_slices_by_dim.get(poly.ndim, 0) + len(pos) - 1
+            if shared_box is not None:
+                stats.record_slices(poly.ndim, len(pos),
+                                    time.perf_counter() - t0)
 
         for p_, v_ in zip(pos, vals):
             child_polys = list(other_polys)

@@ -4,7 +4,10 @@ The corpus is a 2-D datacube (document × position); a training batch is
 a Polytope extraction: a box request over a document range × position
 window, planned by the slicer and gathered with the exact-byte path.
 Sharded loading: each data-parallel host plans and reads only its batch
-rows (plan-first ethos end-to-end).
+rows (plan-first ethos end-to-end).  All rows of a batch are submitted
+as one :class:`~repro.serve.extraction.ExtractionService` batch, so
+duplicate windows plan once and recurring windows across steps/epochs
+hit the plan cache (DESIGN.md §4).
 
 Tokens are synthetic but *learnable*: a fixed-seed order-2 Markov chain,
 so small LMs show decreasing loss in the examples/tests.
@@ -16,8 +19,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import (Box, OrderedAxis, PolytopeExtractor, Request,
-                        TensorDatacube)
+from repro.core import Box, OrderedAxis, Request, TensorDatacube
 
 
 @dataclass
@@ -38,7 +40,13 @@ class TokenCube:
                                                 dtype=float))
         self.cube = TensorDatacube([doc_axis, pos_axis],
                                    dtype=np.dtype(np.int32))
-        self.extractor = PolytopeExtractor(self.cube)
+        from repro.serve.extraction import ExtractionService
+
+        # Random windows mostly miss the cache in normal training; the
+        # cache pays off on exact-step replay (fault-tolerant restore)
+        # and epoch revisits, so keep it small — plans are per-row and
+        # cheap to rebuild.
+        self.service = ExtractionService(self.cube, capacity=512)
 
     def _doc(self, doc_id: int) -> np.ndarray:
         rng = np.random.default_rng(self.seed * 100_003 + doc_id)
@@ -68,10 +76,11 @@ class TokenCube:
         rows = batch_size // n_shards
         docs = rng.integers(0, self.n_docs, rows)
         starts = rng.integers(0, self.doc_len - seq_len - 1, rows)
-        toks = np.empty((rows, seq_len + 1), np.int32)
-        for i, (d, s0) in enumerate(zip(docs, starts)):
-            req = Request([Box(("doc", "pos"), [d, s0],
-                               [d, s0 + seq_len])])
-            res = self.extractor.extract(req, flat)
-            toks[i] = res.values
+        if rows == 0:
+            toks = np.empty((0, seq_len + 1), np.int32)
+            return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        reqs = [Request([Box(("doc", "pos"), [d, s0], [d, s0 + seq_len])])
+                for d, s0 in zip(docs, starts)]
+        results = self.service.submit_batch(reqs, flat)
+        toks = np.stack([res.values for res in results]).astype(np.int32)
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

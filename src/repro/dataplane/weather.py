@@ -119,6 +119,30 @@ class WeatherCube:
             Path(("time", "level", "lat", "lon"), base, waypoints)])
 
 
+# Default spot locations for serving mixes: London, Paris, New York,
+# Tokyo (lat, lon).
+SPOT_LOCATIONS = ((51.5, 0.0), (48.9, 2.3), (40.7, -74.0), (35.7, 139.7))
+
+
+def request_population(wc: WeatherCube,
+                       spots=SPOT_LOCATIONS) -> list[Request]:
+    """Ranked serving-mix population: country crops × time/level, spot
+    time-series, vertical profiles.  Zipf-sampling over this list makes
+    a few crops hot — the repetitive production stream the plan cache
+    (DESIGN.md §4) targets; used by ``launch/serve.py --mode extract``
+    and ``benchmarks/bench_plan_cache.py``."""
+    population = []
+    for name in COUNTRIES:
+        for t in (0.0, 3600.0):
+            for lev in (0.0, 1.0):
+                population.append(wc.country_request(name, t, lev))
+    for lat, lon in spots:
+        population.append(wc.timeseries_request(lat, lon, 0.0,
+                                                3 * 3600.0))
+        population.append(wc.profile_request(lat, lon))
+    return population
+
+
 def paris_newyork_path(cube: WeatherCube, n_wp: int = 8) -> np.ndarray:
     """Great-circle-ish Paris→New York descent/climb profile."""
     lats = np.linspace(48.85, 40.7, n_wp)

@@ -1,6 +1,13 @@
-"""Serving launcher: continuous-batching engine over the paged KV cache.
+"""Serving launchers.
 
-  python -m repro.launch.serve --arch glm4-9b --requests 8
+Two modes:
+
+* ``lm``      — continuous-batching LM engine over the paged KV cache:
+                  python -m repro.launch.serve --mode lm --arch glm4-9b
+* ``extract`` — polytope extraction service under a Zipfian request mix
+  (the production pattern: a few hot crops dominate traffic), serving
+  plans from the LRU plan cache (DESIGN.md §4):
+                  python -m repro.launch.serve --mode extract --requests 512
 """
 
 from __future__ import annotations
@@ -8,26 +15,17 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_arch
-from repro.models.transformer import init_params
-from repro.serve.engine import EngineConfig, Request, ServeEngine
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=[a for a in ARCH_IDS],
-                    default="glm4-9b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new-tokens", type=int, default=16)
-    args = ap.parse_args()
-
-    # smoke config (full configs need a pod)
+def run_lm(args) -> None:
     import importlib
 
+    import jax
+
     from repro.configs import _MODULES
+    from repro.models.transformer import init_params
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
 
     mod = importlib.import_module(f"repro.configs.{_MODULES[args.arch]}")
     if not hasattr(mod, "_smoke"):
@@ -50,6 +48,63 @@ def main() -> None:
     print(f"served {len(done)} requests / {n_tok} tokens "
           f"in {dt:.1f}s ({n_tok / dt:.1f} tok/s)")
     print(f"KV pool utilization at end: {engine.pager.utilization:.0%}")
+
+
+def run_extract(args) -> None:
+    from repro.dataplane.weather import WeatherCube, request_population
+    from repro.serve.extraction import ExtractionService
+
+    wc = WeatherCube(n=args.grid_n, n_times=4, n_levels=4)
+    data = wc.field_data()
+    svc = ExtractionService(wc.cube, capacity=args.cache_capacity)
+    population = request_population(wc)
+
+    if args.zipf_s <= 1.0:
+        raise SystemExit("--zipf-s must be > 1 (Zipf exponent)")
+    rng = np.random.default_rng(args.seed)
+    ranks = np.minimum(rng.zipf(args.zipf_s, size=args.requests) - 1,
+                       len(population) - 1)
+    t0 = time.perf_counter()
+    n_points = 0
+    for i in range(0, len(ranks), args.batch):
+        batch = [population[r] for r in ranks[i:i + args.batch]]
+        results = svc.submit_batch(batch, data)
+        n_points += sum(r.plan.n_points for r in results)
+    dt = time.perf_counter() - t0
+
+    s = svc.stats
+    print(f"served {len(ranks)} requests / {n_points} points "
+          f"in {dt:.2f}s ({len(ranks) / dt:.0f} req/s)")
+    print(f"plan cache: {s.hits} hits / {s.misses} misses "
+          f"(+{s.batch_dedup} batch-dedup) = {s.hit_rate:.0%} hit rate, "
+          f"{s.evictions} evictions")
+    print(f"planning {s.plan_time_s:.2f}s, shared gather "
+          f"{s.gather_time_s:.2f}s, read sharing {s.sharing_factor:.2f}x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "extract"], default="lm")
+    ap.add_argument("--requests", type=int, default=8)
+    # lm mode
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    # extract mode
+    ap.add_argument("--grid-n", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--cache-capacity", type=int, default=256)
+    ap.add_argument("--zipf-s", type=float, default=1.3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mode == "extract":
+        run_extract(args)
+    else:
+        from repro.configs import ARCH_IDS
+
+        if args.arch not in ARCH_IDS:
+            raise SystemExit(f"unknown arch {args.arch}")
+        run_lm(args)
 
 
 if __name__ == "__main__":

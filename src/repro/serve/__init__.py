@@ -1,1 +1,16 @@
-from . import engine, kv_cache  # noqa: F401
+# The extraction service is the light half of this package (needs only
+# repro.core); the LM engine pulls the full model stack, so it loads
+# lazily — `repro.serve.engine` still works as an attribute and
+# `from repro.serve.engine import ...` as a module path.
+import importlib
+
+from .extraction import (CacheStats, ExtractionService,  # noqa: F401
+                         PlanCache, ServiceResult)
+
+_LAZY = ("engine", "kv_cache")
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,240 @@
+"""Extraction service: plan caching + batched request serving (DESIGN.md §4).
+
+Production request streams against a datacube are highly repetitive —
+the same country crop every forecast cycle, the same recsys region every
+step, the same flight corridor for every flight on a route.  Re-running
+Algorithm 1 per request makes *planning*, not I/O, the bottleneck at
+scale.  This layer:
+
+* keys every request by its canonical content hash
+  (``Request.canonical_hash``) so permuted-but-equivalent requests
+  collide;
+* serves :class:`~repro.core.index_tree.ExtractionPlan` objects from a
+  bounded LRU (:class:`PlanCache`) with hit/miss/eviction counters
+  exposed like ``SliceStats``;
+* dedupes concurrent requests inside a batch (plan once, share the
+  plan object);
+* executes all cache-missed gathers of a batch through one shared
+  coalesced-run union read, so overlapping requests read each byte once.
+
+Plans are immutable once built, so cache hits return the *same* plan
+object — byte-identical offsets to the cold plan by construction.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core import PolytopeExtractor, Request, gather
+from repro.core.datacube import Datacube
+from repro.core.index_tree import ExtractionPlan, coalesce_runs
+from repro.core.shapes import CANON_TOL
+from repro.core.slicer import SliceStats
+
+
+@dataclass
+class CacheStats:
+    """Plan-cache instrumentation (the serving analogue of SliceStats)."""
+
+    hits: int = 0                   # plan served from the LRU
+    misses: int = 0                 # plan built by Algorithm 1
+    evictions: int = 0              # plans dropped at capacity
+    batch_dedup: int = 0            # duplicate requests inside one batch
+    plan_time_s: float = 0.0        # cumulative cold-planning walltime
+    gather_time_s: float = 0.0      # cumulative shared-gather walltime
+    bytes_requested: int = 0        # sum over served requests
+    bytes_read: int = 0             # union reads actually issued
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookups
+        return self.hits / n if n else 0.0
+
+    @property
+    def sharing_factor(self) -> float:
+        """requested/read ≥ 1: how much the batch union read saved."""
+        return self.bytes_requested / self.bytes_read if self.bytes_read \
+            else 1.0
+
+
+class PlanCache:
+    """Bounded LRU of ``canonical_hash → ExtractionPlan``."""
+
+    def __init__(self, capacity: int = 1024):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._od: OrderedDict[str, ExtractionPlan] = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._od
+
+    def get(self, key: str) -> ExtractionPlan | None:
+        plan = self._od.get(key)
+        if plan is None:
+            self.stats.misses += 1
+            return None
+        self._od.move_to_end(key)
+        self.stats.hits += 1
+        return plan
+
+    def put(self, key: str, plan: ExtractionPlan) -> None:
+        if key in self._od:
+            self._od.move_to_end(key)
+        self._od[key] = plan
+        while len(self._od) > self.capacity:
+            self._od.popitem(last=False)
+            self.stats.evictions += 1
+
+    def keys(self) -> list[str]:
+        """LRU → MRU order (eviction order is the front)."""
+        return list(self._od)
+
+
+@dataclass
+class ServiceResult:
+    """One served request: its plan, optional gathered values, and how
+    the plan was obtained (``stats`` is None unless planned cold)."""
+
+    request: Request
+    key: str
+    plan: ExtractionPlan
+    cached: bool
+    values: Any | None = None
+    stats: SliceStats | None = None
+
+
+class ExtractionService:
+    """Many concurrent polytope requests → deduped, cached, batched
+    extraction over one datacube.
+
+    Thread-safe: the pipeline prefetcher calls :meth:`submit_batch` from
+    its worker thread while launchers may probe stats from the main
+    thread.
+    """
+
+    def __init__(self, datacube: Datacube, capacity: int = 1024,
+                 use_kernel: bool = False, tol: float = CANON_TOL):
+        self.datacube = datacube
+        self.extractor = PolytopeExtractor(datacube, use_kernel=use_kernel)
+        self.cache = PlanCache(capacity)
+        self.tol = tol
+        self._lock = threading.Lock()
+
+    @property
+    def stats(self) -> CacheStats:
+        return self.cache.stats
+
+    # -- single request ----------------------------------------------------
+    def plan(self, request: Request) -> tuple[ExtractionPlan, bool, str]:
+        """Plan one request through the cache.
+
+        Returns ``(plan, cached, key)``; a hit returns the exact plan
+        object built on the cold miss.
+        """
+        key = request.canonical_hash(self.tol)
+        with self._lock:
+            plan = self.cache.get(key)
+            if plan is not None:
+                return plan, True, key
+            t0 = time.perf_counter()
+            plan, _ = self.extractor.plan(request)
+            self.cache.stats.plan_time_s += time.perf_counter() - t0
+            self.cache.put(key, plan)
+            return plan, False, key
+
+    def extract(self, request: Request,
+                flat_data: Any | None = None) -> ServiceResult:
+        return self.submit_batch([request], flat_data)[0]
+
+    # -- batched serving -----------------------------------------------------
+    def submit_batch(self, requests: Sequence[Request],
+                     flat_data: Any | None = None) -> list[ServiceResult]:
+        """Serve a batch of concurrent requests.
+
+        Requests are deduped by canonical hash (one plan per distinct
+        geometry), missed plans run Algorithm 1 once, and — when
+        ``flat_data`` is given — all distinct plans are gathered through
+        a single coalesced union read shared across the batch.
+        """
+        keys = [r.canonical_hash(self.tol) for r in requests]
+        results: list[ServiceResult] = []
+        batch_plans: dict[str, ExtractionPlan] = {}
+
+        with self._lock:
+            for req, key in zip(requests, keys):
+                if key in batch_plans:
+                    # same geometry earlier in this batch — share it
+                    self.cache.stats.batch_dedup += 1
+                    results.append(ServiceResult(
+                        request=req, key=key, plan=batch_plans[key],
+                        cached=True))
+                    continue
+                plan = self.cache.get(key)
+                stats = None
+                cached = plan is not None
+                if plan is None:
+                    t0 = time.perf_counter()
+                    plan, stats = self.extractor.plan(req)
+                    self.cache.stats.plan_time_s += \
+                        time.perf_counter() - t0
+                    self.cache.put(key, plan)
+                batch_plans[key] = plan
+                results.append(ServiceResult(
+                    request=req, key=key, plan=plan, cached=cached,
+                    stats=stats))
+
+        # Gather outside the lock: plans are immutable and the results
+        # are local, so concurrent callers only contend on the (short)
+        # planning section, not on the batch I/O.
+        if flat_data is not None:
+            self._gather_batch(results, batch_plans, flat_data)
+        return results
+
+    def _gather_batch(self, results: list[ServiceResult],
+                      batch_plans: dict[str, ExtractionPlan],
+                      flat_data: Any) -> None:
+        """One union read for the whole batch, then slice each request's
+        values out of the shared buffer (coalesced-run sharing)."""
+        nonempty = {k: p for k, p in batch_plans.items() if p.n_points}
+        if not nonempty:
+            for res in results:
+                res.values = np.empty(0, self.datacube.dtype)
+            return
+        t0 = time.perf_counter()
+        union = np.unique(np.concatenate(
+            [p.offsets for p in nonempty.values()]))
+        starts, lengths = coalesce_runs(union)
+        union_plan = ExtractionPlan(
+            offsets=union, run_starts=starts, run_lengths=lengths,
+            coords={}, itemsize=self.datacube.dtype.itemsize)
+        buf = gather(flat_data, union_plan,
+                     use_kernel=self.extractor.use_kernel)
+        per_key: dict[str, Any] = {}
+        for key, plan in nonempty.items():
+            idx = np.searchsorted(union, plan.offsets)
+            per_key[key] = buf[idx]
+        for res in results:
+            if res.plan.n_points:
+                res.values = per_key[res.key]
+            else:
+                res.values = np.empty(0, self.datacube.dtype)
+        with self._lock:
+            for res in results:
+                self.cache.stats.bytes_requested += res.plan.nbytes
+            self.cache.stats.bytes_read += union_plan.nbytes
+            self.cache.stats.gather_time_s += time.perf_counter() - t0

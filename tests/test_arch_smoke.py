@@ -8,6 +8,8 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_arch
 
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
+
 
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_smoke_train_step(arch_id):

@@ -3,7 +3,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (ConvexPolytope, OrderedAxis, Request, Slicer,
                         TensorDatacube)
@@ -12,6 +14,8 @@ from repro.kernels.slice.ops import pack_polytopes
 
 settings.register_profile("batched", deadline=None, max_examples=25)
 settings.load_profile("batched")
+
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
 
 
 def host_offsets(verts: np.ndarray, n0: int, n1: int) -> set[int]:

@@ -11,6 +11,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
+
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
 

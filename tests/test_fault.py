@@ -11,6 +11,8 @@ from repro.train.fault import FaultConfig, StragglerMonitor, Supervisor
 from repro.train.optimizer import OptimizerConfig
 from repro.train.train_state import init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
+
 
 def _setup(tmp_path, ckpt_every=5):
     cfg = OptimizerConfig(kind="adamw", lr=0.05, weight_decay=0.0,

@@ -11,6 +11,8 @@ from repro.kernels.paged_attn import kernel as pk, ref as pr
 from repro.kernels.segment import kernel as sk, ref as sr
 from repro.kernels.slice import kernel as slk, ops as slo, ref as slr
 
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
+
 
 def tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \

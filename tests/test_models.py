@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.layers import (cross_entropy, cross_entropy_tied_chunked)
 from repro.models.moe import MoEConfig, moe_ffn, moe_init
@@ -19,6 +21,8 @@ from repro.models.transformer import (TransformerConfig, decode_step,
 
 settings.register_profile("models", deadline=None, max_examples=15)
 settings.load_profile("models")
+
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
 
 
 class TestGaunt:

@@ -1,0 +1,181 @@
+"""Plan-cache semantics: canonical hashing, LRU behaviour, and the
+extraction service (DESIGN.md §4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Box, ConvexPolytope, Disk, OrderedAxis, Request,
+                        Select, Slicer, Span, TensorDatacube, Union)
+from repro.dataplane.pipeline import CachedExtractionSource, Prefetcher
+from repro.serve.extraction import ExtractionService, PlanCache
+
+
+def small_cube(n=12, names=("a", "b", "c")):
+    return TensorDatacube(
+        [OrderedAxis(nm, np.arange(float(n))) for nm in names])
+
+
+def tri_request(shift=0.0):
+    verts = np.array([[0.0, 0.0], [8.0, 0.0], [0.0, 8.0]]) + shift
+    return Request([ConvexPolytope(("a", "b"), verts),
+                    Select("c", [1.0, 3.0])])
+
+
+class TestCanonicalHash:
+    def test_permuted_union_members_collide(self):
+        s1 = Box(("a", "b"), [0, 0], [3, 3])
+        s2 = Disk(("a", "b"), (6.0, 6.0), 2.0)
+        r_ab = Request([Union([s1, s2])])
+        r_ba = Request([Union([s2, s1])])
+        assert r_ab.canonical_hash() == r_ba.canonical_hash()
+        assert r_ab.canonical_form() == r_ba.canonical_form()
+
+    def test_permuted_select_values_collide(self):
+        r1 = Request([Select("c", [3.0, 1.0, 2.0])])
+        r2 = Request([Select("c", [1.0, 2.0, 3.0])])
+        r3 = Request([Select("c", [1.0]), Select("c", [3.0, 2.0])])
+        assert r1.canonical_hash() == r2.canonical_hash()
+        assert r1.canonical_hash() == r3.canonical_hash()
+
+    def test_duplicate_members_and_values_collide(self):
+        s = Box(("a", "b"), [0, 0], [3, 3])
+        assert (Request([Union([s, s]), Select("c", [1, 1])])
+                .canonical_hash() ==
+                Request([s, Select("c", [1])]).canonical_hash())
+
+    def test_tolerance_quantized_vertices_collide(self):
+        base = np.array([[0.0, 0.0], [8.0, 0.0], [0.0, 8.0]])
+        jitter = base + 1e-13          # far below the quantum
+        assert (Request([ConvexPolytope(("a", "b"), base)]).canonical_hash()
+                == Request([ConvexPolytope(("a", "b"),
+                                           jitter)]).canonical_hash())
+
+    def test_geometrically_distinct_differ(self):
+        assert (tri_request(0.0).canonical_hash()
+                != tri_request(1.0).canonical_hash())
+        assert (Request([Span("a", 0, 5)]).canonical_hash()
+                != Request([Span("b", 0, 5)]).canonical_hash())
+        assert (Request([Select("c", [1.0])]).canonical_hash()
+                != Request([Select("c", [2.0])]).canonical_hash())
+
+    def test_box_and_equivalent_polytope_collide(self):
+        # is_box is an execution detail, not geometry — same plan bytes.
+        box = Box(("a", "b"), [1, 2], [4, 5])
+        verts = np.array([[1, 2], [1, 5], [4, 2], [4, 5]], float)
+        assert (Request([box]).canonical_hash()
+                == Request([ConvexPolytope(("a", "b"),
+                                           verts)]).canonical_hash())
+
+    def test_hash_is_stable_content_hash(self):
+        # Process-independent: a fixed request pins its digest format.
+        h = Request([Span("a", 0.0, 2.0)]).canonical_hash()
+        assert isinstance(h, str) and len(h) == 64
+        assert h == Request([Span("a", 0.0, 2.0)]).canonical_hash()
+
+
+class TestPlanCacheLRU:
+    def test_eviction_order_is_lru(self):
+        pc = PlanCache(capacity=2)
+        pc.put("k1", "p1")
+        pc.put("k2", "p2")
+        assert pc.get("k1") == "p1"        # k1 becomes MRU
+        pc.put("k3", "p3")                 # evicts k2, not k1
+        assert "k2" not in pc
+        assert "k1" in pc and "k3" in pc
+        assert pc.stats.evictions == 1
+
+    def test_counters(self):
+        pc = PlanCache(capacity=4)
+        assert pc.get("missing") is None
+        pc.put("k", "p")
+        assert pc.get("k") == "p"
+        assert pc.stats.hits == 1
+        assert pc.stats.misses == 1
+        assert pc.stats.hit_rate == 0.5
+
+
+class TestExtractionService:
+    def test_repeat_request_served_from_cache(self):
+        svc = ExtractionService(small_cube())
+        cold = svc.extract(tri_request())
+        assert not cold.cached
+        assert cold.stats is not None            # cold plan ran Alg. 1
+        warm = svc.extract(tri_request())
+        assert warm.cached
+        assert warm.stats is None                # no new SliceStats
+        assert svc.stats.hits == 1 and svc.stats.misses == 1
+        # byte-identical offsets: the exact plan object is shared
+        assert warm.plan is cold.plan
+        np.testing.assert_array_equal(warm.plan.offsets, cold.plan.offsets)
+
+    def test_hit_offsets_match_independent_cold_plan(self):
+        cube = small_cube()
+        svc = ExtractionService(cube)
+        svc.extract(tri_request())
+        hit = svc.extract(tri_request())
+        ref, _ = Slicer(cube).extract_plan(tri_request())
+        np.testing.assert_array_equal(hit.plan.offsets, ref.offsets)
+
+    def test_batch_dedupes_and_shares_reads(self):
+        cube = small_cube()
+        data = np.arange(cube.n_elements, dtype=np.float64)
+        svc = ExtractionService(cube)
+        reqs = [tri_request(), tri_request(), tri_request(1.0)]
+        results = svc.submit_batch(reqs, data)
+        assert svc.stats.misses == 2             # two distinct geometries
+        assert svc.stats.batch_dedup == 1        # in-batch duplicate
+        assert results[1].plan is results[0].plan
+        for res in results:
+            np.testing.assert_array_equal(res.values,
+                                          data[res.plan.offsets])
+        # overlapping requests read shared bytes once
+        assert svc.stats.bytes_read < svc.stats.bytes_requested
+        assert svc.stats.sharing_factor > 1.0
+
+    def test_equivalent_permuted_batch_members_hit(self):
+        svc = ExtractionService(small_cube())
+        s1 = Box(("a", "b"), [0, 0], [3, 3])
+        s2 = Disk(("a", "b"), (6.0, 6.0), 2.0)
+        svc.extract(Request([Union([s1, s2])]))
+        res = svc.extract(Request([Union([s2, s1])]))
+        assert res.cached
+
+    def test_lru_eviction_end_to_end(self):
+        svc = ExtractionService(small_cube(), capacity=2)
+        r1, r2, r3 = tri_request(0.0), tri_request(1.0), tri_request(2.0)
+        svc.extract(r1)
+        svc.extract(r2)
+        svc.extract(r1)                  # r1 MRU → order [r2, r1]
+        svc.extract(r3)                  # evicts LRU r2 → [r1, r3]
+        assert svc.stats.evictions == 1
+        assert svc.extract(r1).cached
+        assert svc.extract(r3).cached
+        assert not svc.extract(r2).cached    # r2 was evicted
+
+    def test_empty_plan_values(self):
+        cube = small_cube()
+        data = np.arange(cube.n_elements, dtype=np.float64)
+        svc = ExtractionService(cube)
+        # box entirely outside the grid → empty plan
+        res = svc.extract(Request([Box(("a", "b"), [50, 50], [60, 60])]),
+                          data)
+        assert res.plan.n_points == 0
+        assert len(res.values) == 0
+
+
+class TestPrefetcherReusesPlans:
+    def test_plans_cached_across_steps(self):
+        cube = small_cube()
+        data = np.arange(cube.n_elements, dtype=np.float64)
+        svc = ExtractionService(cube)
+        # recurring production mix: step alternates between two crops
+        crops = [tri_request(0.0), tri_request(2.0)]
+        src = CachedExtractionSource(svc, lambda s: crops[s % 2], data)
+        pf = Prefetcher(src, depth=2)
+        out = [next(pf) for _ in range(6)]
+        pf.close()
+        assert [s for s, _ in out] == list(range(6))
+        assert svc.stats.misses == 2             # one cold plan per crop
+        assert svc.stats.hits >= 4               # later steps all hit
+        ref, _ = Slicer(cube).extract_plan(crops[0])
+        np.testing.assert_array_equal(out[4][1].values, data[ref.offsets])

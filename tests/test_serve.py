@@ -9,6 +9,8 @@ from repro.models.transformer import TransformerConfig, init_params
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 from repro.serve.kv_cache import PagedKVCache
 
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
+
 
 def tiny_cfg():
     return TransformerConfig(

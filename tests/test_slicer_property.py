@@ -8,7 +8,9 @@ in the shape they requested").
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Box, ConvexPolytope, CyclicAxis, Disk, OrderedAxis,
                         Polygon, Request, Select, Slicer, TensorDatacube,

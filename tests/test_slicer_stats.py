@@ -1,0 +1,91 @@
+"""Slicer accounting regressions: categorical frontier dedupe and the
+§5.2 slice-count bound across the vector-leaf / shared-box paths."""
+
+import numpy as np
+
+from repro.core import (Box, CategoricalAxis, ConvexPolytope, OrderedAxis,
+                        Request, Select, Slicer, TensorDatacube, Union)
+
+
+def cat_cube():
+    return TensorDatacube([
+        CategoricalAxis("param", ["t2m", "u10", "v10"]),
+        OrderedAxis("x", np.arange(8.0)),
+        OrderedAxis("y", np.arange(8.0)),
+    ])
+
+
+class TestCategoricalDedupe:
+    def test_duplicate_values_in_one_select(self):
+        cube = cat_cube()
+        shapes = [Box(("x", "y"), [0, 0], [5, 5])]
+        dup, sdup = Slicer(cube).extract_plan(
+            Request([Select("param", ["t2m", "t2m"]), *shapes]))
+        one, sone = Slicer(cube).extract_plan(
+            Request([Select("param", ["t2m"]), *shapes]))
+        np.testing.assert_array_equal(np.sort(dup.offsets),
+                                      np.sort(one.offsets))
+        # the duplicate label must not double the subtree expansion work
+        assert sdup.n_slices == sone.n_slices
+        assert sdup.n_slices_by_dim == sone.n_slices_by_dim
+
+    def test_duplicate_values_across_selects(self):
+        cube = cat_cube()
+        shapes = [Box(("x", "y"), [0, 0], [5, 5])]
+        dup, sdup = Slicer(cube).extract_plan(
+            Request([Select("param", ["t2m", "u10"]),
+                     Select("param", ["t2m"]), *shapes]))
+        ref, sref = Slicer(cube).extract_plan(
+            Request([Select("param", ["t2m", "u10"]), *shapes]))
+        np.testing.assert_array_equal(np.sort(dup.offsets),
+                                      np.sort(ref.offsets))
+        assert sdup.n_slices == sref.n_slices
+
+
+class TestSliceCountBound:
+    """§5.2: N_slices ≤ Σ_i Π_{j≤i} n_j with n_j the indices found on
+    axis j — and by-dim counts must always sum to the total."""
+
+    def test_box_meets_bound_exactly(self):
+        n1, n2, n3 = 4, 5, 6
+        cube = TensorDatacube(
+            [OrderedAxis(n, np.arange(10.0)) for n in "abc"])
+        plan, stats = Slicer(cube).extract_plan(Request(
+            [Box(("a", "b", "c"), [0, 0, 0],
+                 [n1 - 1.0, n2 - 1.0, n3 - 1.0])]))
+        # the shared-box and vector-leaf fast paths must report the same
+        # counts the per-index path would: exactly the §5.2 bound
+        assert stats.n_slices == n1 + n1 * n2 + n1 * n2 * n3
+        assert stats.n_slices_by_dim == {3: n1, 2: n1 * n2,
+                                         1: n1 * n2 * n3}
+        assert plan.n_points == n1 * n2 * n3
+
+    def test_by_dim_sums_to_total(self):
+        cube = TensorDatacube(
+            [OrderedAxis(n, np.arange(10.0)) for n in "abc"])
+        reqs = [
+            Request([Box(("a", "b", "c"), [1, 1, 1], [4, 6, 3])]),
+            Request([ConvexPolytope(("a", "b", "c"), np.array(
+                [[0, 0, 0], [7, 1, 1], [1, 7, 2], [2, 2, 7]], float))]),
+            Request([Union([Box(("a", "b"), [0, 0], [3, 3]),
+                            Box(("a", "b"), [2, 2], [6, 6])])]),
+        ]
+        for req in reqs:
+            _, stats = Slicer(cube).extract_plan(req)
+            assert sum(stats.n_slices_by_dim.values()) == stats.n_slices
+
+    def test_convex_polytope_respects_bound(self):
+        cube = TensorDatacube(
+            [OrderedAxis(n, np.arange(10.0)) for n in "abc"])
+        verts = np.array([[0, 0, 0], [8, 0, 0], [0, 8, 0], [0, 0, 8]],
+                         float)
+        root, stats = Slicer(cube).build_index_tree(
+            Request([ConvexPolytope(("a", "b", "c"), verts)]))
+        # per-level node counts from the tree itself: n_1, n_1·n_2, …
+        level1 = len(root.children)
+        level2 = sum(len(c.children) for c in root.children.values())
+        level3 = sum(0 if g.leaf_positions is None else
+                     len(g.leaf_positions)
+                     for c in root.children.values()
+                     for g in c.children.values())
+        assert stats.n_slices <= level1 + level2 + level3

@@ -9,6 +9,8 @@ from repro.train.optimizer import (OptimizerConfig, adafactor_init,
                                    global_norm, make_optimizer, schedule)
 from repro.train.train_state import init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
+
 
 def quad_loss(params, batch):
     err = params["w"] - batch["target"]
