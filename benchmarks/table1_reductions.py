@@ -8,16 +8,27 @@ class by construction).
 
 Columns mirror the paper: traditional bytes, bbox bytes, polytope
 bytes, reduction factors, slicing + total times.
+
+Run as a script to emit ``BENCH_extraction.json`` (reduction factor,
+plan time, bytes moved per scenario — including the irregular
+transformed-cube scenarios) so the perf trajectory is tracked
+PR-over-PR:
+
+  PYTHONPATH=src python benchmarks/table1_reductions.py [--full]
 """
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 
 from repro.core import (BoundingBoxExtractor, Box, Disk, OrderedAxis,
                         Path, PolytopeExtractor, Request, Select, Span,
                         TensorDatacube, TraditionalExtractor)
-from repro.dataplane.weather import COUNTRIES, WeatherCube
+from repro.dataplane.weather import (COUNTRIES, IrregularWeatherCube,
+                                     WeatherCube)
 
 
 def _row(name, cube, request, field_axes=("lat", "lon")):
@@ -105,5 +116,63 @@ def mri_row(size: int = 512) -> dict:
     return _row("mri_blood_vessel", cube, vessel, field_axes=("y", "x"))
 
 
+def irregular_rows(n_lat: int = 320, n_lon: int = 640) -> list[dict]:
+    """Irregular transformed-cube scenarios (DESIGN.md §2.5): merged
+    datetime, mapped Gaussian latitudes, cyclic longitude with a
+    cross-seam country crop — the planner stays exact while the index
+    space stops being a regular lattice."""
+    iwc = IrregularWeatherCube(n_dates=2, times_per_day=4, n_levels=3,
+                               n_lat=n_lat, n_lon=n_lon)
+    return [
+        _row("irregular_uk_cross_seam", iwc, iwc.country_request("uk")),
+        _row("irregular_seam_box", iwc,
+             iwc.seam_box_request(35.0, 62.0, -25.0, 25.0)),
+        _row("irregular_ts_across_midnight", iwc,
+             iwc.timeseries_request(51.5, 0.0, 43200.0,
+                                    86400.0 + 43200.0)),
+    ]
+
+
 def table1(n: int = 1280, mri_size: int = 512) -> list[dict]:
     return meteorology_rows(n) + [mri_row(mri_size)]
+
+
+def write_bench(rows: list[dict],
+                out_path: str = "BENCH_extraction.json") -> None:
+    """Persist the extraction trajectory: reduction factor, plan time,
+    bytes moved per scenario."""
+    payload = {
+        "bench": "extraction",
+        "rows": [dict(example=r["example"],
+                      polytope_bytes=r["polytope_bytes"],
+                      bbox_bytes=r["bbox_bytes"],
+                      traditional_bytes=r["traditional_bytes"],
+                      n_points=r["n_points"],
+                      reduction_vs_traditional=r["reduction_vs_traditional"],
+                      reduction_vs_bbox=r["reduction_vs_bbox"],
+                      plan_time_s=r["total_s"]) for r in rows],
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale O1280 / 512³ cubes")
+    ap.add_argument("--out", default="BENCH_extraction.json")
+    args = ap.parse_args()
+    n = 1280 if args.full else 128
+    rows = table1(n=n, mri_size=512 if args.full else 128)
+    rows += irregular_rows(*((640, 1280) if args.full else (320, 640)))
+    for r in rows:
+        print(f"{r['example']}: {r['polytope_bytes']:,} B, "
+              f"reduction {r['reduction_vs_traditional']:,.0f}× vs "
+              f"traditional, {r['reduction_vs_bbox']:.2f}× vs bbox, "
+              f"plan {r['total_s'] * 1e3:.1f} ms")
+    write_bench(rows, args.out)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,11 @@
 # engine — geometry, axes, datacubes, Algorithm-1 slicer, index trees,
 # extraction plans and executors (plus the bounding-box / whole-field
 # baselines the paper compares against).
-from .axes import Axis, CategoricalAxis, CyclicAxis, OrderedAxis
+from .axes import (Axis, CategoricalAxis, CyclicAxis, CyclicTransform,
+                   MappedTransform, MergedTransform, OrderedAxis, Transform)
 from .batched import batched_extract_2d, batched_plan_2d
 from .datacube import (BranchingDatacube, Datacube, OctahedralGridDatacube,
-                       TensorDatacube)
+                       TensorDatacube, TransformedDatacube)
 from .extractor import (BoundingBoxExtractor, ExtractResult,
                         PolytopeExtractor, TraditionalExtractor, gather)
 from .geometry import Polytope, box_polytope, regular_polygon, slice_vertices
@@ -18,8 +19,10 @@ from .slicer import Slicer, SliceStats
 
 __all__ = [
     "Axis", "CategoricalAxis", "CyclicAxis", "OrderedAxis",
+    "Transform", "CyclicTransform", "MappedTransform", "MergedTransform",
     "BranchingDatacube", "Datacube", "OctahedralGridDatacube",
-    "TensorDatacube", "BoundingBoxExtractor", "ExtractResult",
+    "TensorDatacube", "TransformedDatacube",
+    "BoundingBoxExtractor", "ExtractResult",
     "PolytopeExtractor", "TraditionalExtractor", "gather", "Polytope",
     "box_polytope", "regular_polygon", "slice_vertices",
     "convex_hull_prune", "ExtractionPlan", "IndexNode", "coalesce_runs",

@@ -1,6 +1,6 @@
-"""Datacube axes (paper §3.1).
+"""Datacube axes (paper §3.1) and axis transforms (DESIGN.md §2.5).
 
-Two families:
+Two axis families:
 
 * **Ordered axes** — comparable, interpolatable indices (floats, ints,
   datetimes).  Range queries are meaningful; the slicer slices along
@@ -13,6 +13,15 @@ Two families:
 Index lookup is vectorised ``searchsorted`` — this is the "more
 efficient datacube look-up mechanism" the paper flags as future work
 after measuring XArray lookup dominating total runtime (§5.1, Fig 8a).
+
+**Axis transforms** generalize the index space beyond regular lattices
+(the production datacube shapes of *Beyond Standard Datacubes*): a
+:class:`Transform` presents one or more *storage* axes of a regular
+cube as a single *logical* axis the slicer plans against — cyclic
+(longitude wrap), merged (date+time → datetime), and mapped (monotone
+value→index for reduced/Gaussian grids).  ``TransformedDatacube``
+(core/datacube.py) owns the logical↔storage translation; transforms
+only describe it.
 """
 
 from __future__ import annotations
@@ -153,6 +162,147 @@ class CyclicAxis(OrderedAxis):
         _, first = np.unique(pos, return_index=True)
         first.sort()
         return pos[first], val[first]
+
+    def nearest(self, value: float) -> tuple[int, float]:
+        """Nearest index under the cyclic metric: a point just below the
+        seam snaps *across* it to the first stored value when that is
+        closer (e.g. lon 359.9 → the 0.0 cell, not 359.0)."""
+        base = self._sorted
+        v = base[0] + (value - base[0]) % self.period
+        pos, val = super().nearest(v)
+        if abs(base[0] + self.period - v) < abs(val - v):
+            pos = int(self._order[0]) if self._order is not None else 0
+            val = float(base[0])
+        return pos, val
+
+
+# ---------------------------------------------------------------------------
+# Axis transforms (DESIGN.md §2.5)
+
+class Transform:
+    """Protocol: present stored axes of a regular cube as one logical axis.
+
+    ``logical_name``   — the axis name the slicer sees and requests use.
+    ``storage_names``  — the consumed storage axes, in the base cube's
+                         natural order (consecutive).
+    ``period``         — set iff the logical axis is cyclic; consumed by
+                         request canonicalization (``Datacube.axis_periods``)
+                         so seam-equivalent requests share a plan-cache key.
+
+    Logical axis *positions* address the transform's own index space;
+    :meth:`storage_positions` maps them back onto each storage axis.  The
+    slicer never sees storage coordinates — ``TransformedDatacube``
+    applies this mapping when resolving flat offsets.
+    """
+
+    logical_name: str
+    storage_names: tuple[str, ...]
+    period: float | None = None
+
+    def logical_axis(self, storage_axes: Sequence[OrderedAxis]) -> Axis:
+        """Build the logical axis from the (already constructed) storage
+        axes.  Called once by ``TransformedDatacube``."""
+        raise NotImplementedError
+
+    def storage_positions(self, positions: np.ndarray) -> tuple[np.ndarray, ...]:
+        """Map logical positions → one position array per storage axis."""
+        raise NotImplementedError
+
+
+class CyclicTransform(Transform):
+    """Cyclic wrap (longitude): the stored axis spans less than one
+    period; logical requests may straddle the seam and are split into
+    canonical in-period sub-intervals by :class:`CyclicAxis`."""
+
+    def __init__(self, name: str, period: float,
+                 storage_name: str | None = None):
+        self.logical_name = name
+        self.storage_names = (storage_name or name,)
+        self.period = float(period)
+
+    def logical_axis(self, storage_axes: Sequence[OrderedAxis]) -> Axis:
+        (ax,) = storage_axes
+        return CyclicAxis(self.logical_name, ax.values, period=self.period)
+
+    def storage_positions(self, positions: np.ndarray) -> tuple[np.ndarray, ...]:
+        return (np.asarray(positions, np.int64),)
+
+
+class MergedTransform(Transform):
+    """Two stored axes presented as one logical axis (date+time →
+    datetime).
+
+    Logical value at storage ``(i, j)`` is ``major[i] + minor[j]`` (both
+    already in a common unit, e.g. seconds); the flattened row-major
+    sequence must be strictly increasing, i.e. the major step must
+    exceed the minor axis's span.  Logical position ``p`` ↔ storage
+    ``(p // n_minor, p % n_minor)`` — when the pair is storage-minor
+    this keeps logical leaf runs byte-contiguous.
+    """
+
+    def __init__(self, name: str, storage_names: Sequence[str]):
+        if len(storage_names) != 2:
+            raise ValueError("MergedTransform merges exactly two axes")
+        self.logical_name = name
+        self.storage_names = tuple(storage_names)
+        self.period = None
+        self._n_minor: int | None = None
+
+    def logical_axis(self, storage_axes: Sequence[OrderedAxis]) -> Axis:
+        major, minor = storage_axes
+        vals = (np.asarray(major.values)[:, None] +
+                np.asarray(minor.values)[None, :]).ravel()
+        if np.any(np.diff(vals) <= 0):
+            raise ValueError(
+                f"merged axis {self.logical_name}: combined values must be "
+                f"strictly increasing (major step must exceed minor span)")
+        self._n_minor = len(minor)
+        return OrderedAxis(self.logical_name, vals)
+
+    def storage_positions(self, positions: np.ndarray) -> tuple[np.ndarray, ...]:
+        if self._n_minor is None:
+            raise RuntimeError("logical_axis() must be called first")
+        p = np.asarray(positions, np.int64)
+        return (p // self._n_minor, p % self._n_minor)
+
+
+class MappedTransform(Transform):
+    """Monotone value→index mapping for irregular spacings — the
+    reduced/Gaussian-grid shape: storage holds plain row indices, the
+    logical axis carries the physically meaningful (irregularly spaced)
+    coordinates.  ``values[i]`` is the logical coordinate of storage
+    position ``i`` (monotone either way; ``OrderedAxis`` keeps the
+    storage-position map)."""
+
+    def __init__(self, name: str, storage_name: str,
+                 values: Sequence[float] | None = None,
+                 func: Any | None = None):
+        if (values is None) == (func is None):
+            raise ValueError("provide exactly one of values/func")
+        self.logical_name = name
+        self.storage_names = (storage_name,)
+        self.period = None
+        self._values = None if values is None else np.asarray(values,
+                                                              np.float64)
+        self._func = func
+
+    def logical_axis(self, storage_axes: Sequence[OrderedAxis]) -> Axis:
+        (ax,) = storage_axes
+        vals = self._values if self._values is not None else np.asarray(
+            self._func(np.arange(len(ax))), np.float64)
+        if len(vals) != len(ax):
+            raise ValueError(
+                f"mapped axis {self.logical_name}: {len(vals)} values for "
+                f"{len(ax)} storage positions")
+        d = np.diff(vals)
+        if not (np.all(d > 0) or np.all(d < 0)):
+            raise ValueError(
+                f"mapped axis {self.logical_name}: mapping must be "
+                f"strictly monotone")
+        return OrderedAxis(self.logical_name, vals)
+
+    def storage_positions(self, positions: np.ndarray) -> tuple[np.ndarray, ...]:
+        return (np.asarray(positions, np.int64),)
 
 
 class CategoricalAxis(Axis):

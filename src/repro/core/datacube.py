@@ -12,6 +12,9 @@ at that node.  Three concrete cubes:
 * ``BranchingDatacube``    — a leading categorical axis whose value selects
   a child cube with entirely different axes (paper Fig. 2 `val4 → x,y,z`
   vs `val5 → u,v`).
+* ``TransformedDatacube``  — a regular cube viewed through axis
+  transforms (cyclic/merged/mapped, DESIGN.md §2.5): the slicer plans in
+  logical coordinates, offsets resolve to storage coordinates.
 
 All cubes expose *flat element offsets*: the extraction plan ends in
 byte-precise positions into the flat storage, which is exactly what the
@@ -26,13 +29,24 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from .axes import Axis, CategoricalAxis, CyclicAxis, OrderedAxis
+from .axes import (Axis, CategoricalAxis, CyclicAxis, OrderedAxis,
+                   Transform)
 
 
 class Datacube:
     """Interface used by the slicer."""
 
     dtype: np.dtype = np.dtype(np.float64)
+
+    # -- cyclic metadata ---------------------------------------------------
+    def axis_periods(self) -> dict[str, float]:
+        """Period per cyclic *logical* axis (empty when none).
+
+        Consumed by request canonicalization (``Request.canonical_hash``)
+        so that seam-straddling requests shifted by whole periods share a
+        plan-cache key (DESIGN.md §2.5).
+        """
+        return {}
 
     # -- tree navigation -------------------------------------------------
     def next_axis(self, path: Mapping[str, int]) -> str | None:
@@ -105,6 +119,10 @@ class TensorDatacube(Datacube):
 
     def shape(self) -> tuple[int, ...]:
         return tuple(self._sizes)
+
+    def axis_periods(self) -> dict[str, float]:
+        return {a.name: a.period for a in self._axes
+                if isinstance(a, CyclicAxis)}
 
 
 class OctahedralGridDatacube(Datacube):
@@ -197,6 +215,125 @@ class OctahedralGridDatacube(Datacube):
     def field_nbytes(self) -> int:
         return self.points_per_field * self.dtype.itemsize
 
+    def axis_periods(self) -> dict[str, float]:
+        return {"lon": 360.0}
+
+
+class TransformedDatacube(Datacube):
+    """Logical view of a regular :class:`TensorDatacube` through axis
+    transforms (DESIGN.md §2.5).
+
+    The slicer plans entirely in **logical** coordinates — it only ever
+    sees the transformed axes via :meth:`axis`/:meth:`next_axis` — while
+    :meth:`base_offset`/:meth:`leaf_offsets` resolve logical paths back
+    to **storage** coordinates, so ``ExtractionPlan`` offsets address
+    the untransformed flat storage byte-for-byte.  This is what keeps
+    the paper's exact-byte guarantee when the index space stops being a
+    regular lattice: the transform layer moves the irregularity into the
+    lookup, not into the plan.
+
+    Each transform consumes one or two *consecutive* storage axes and
+    replaces them, in place, with its logical axis; untouched axes pass
+    through under their own names.
+    """
+
+    def __init__(self, base: TensorDatacube, transforms: Sequence[Transform]):
+        self.base = base
+        self.dtype = base.dtype
+        by_first = {t.storage_names[0]: t for t in transforms}
+        if len(by_first) != len(transforms):
+            raise ValueError("transforms consume overlapping storage axes")
+        base_names = base.axis_names
+        names: list[str] = []
+        consumed: set[str] = set()
+        self._transforms: dict[str, Transform] = {}
+        for i, n in enumerate(base_names):
+            if n in consumed:
+                continue
+            t = by_first.get(n)
+            if t is None:
+                names.append(n)
+                continue
+            k = len(t.storage_names)
+            if tuple(base_names[i:i + k]) != t.storage_names:
+                raise ValueError(
+                    f"transform {t.logical_name}: storage axes "
+                    f"{t.storage_names} must be consecutive in the base "
+                    f"cube's natural order {base_names}")
+            names.append(t.logical_name)
+            consumed.update(t.storage_names)
+            self._transforms[t.logical_name] = t
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate logical axis names: {names}")
+        self._logical_names = tuple(names)
+        self._axes: dict[str, Axis] = {}
+        for nm in names:
+            t = self._transforms.get(nm)
+            if t is None:
+                self._axes[nm] = base.axis(nm, {})
+            else:
+                self._axes[nm] = t.logical_axis(
+                    [base.axis(s, {}) for s in t.storage_names])
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self._logical_names
+
+    def next_axis(self, path: Mapping[str, int]) -> str | None:
+        for n in self._logical_names:
+            if n not in path:
+                return n
+        return None
+
+    def axis(self, name: str, path: Mapping[str, int]) -> Axis:
+        return self._axes[name]
+
+    # -- logical → storage resolution -------------------------------------
+    def _storage_path(self, path: Mapping[str, int]) -> dict[str, int]:
+        sp: dict[str, int] = {}
+        for n, p in path.items():
+            t = self._transforms.get(n)
+            if t is None:
+                sp[n] = p
+            else:
+                cols = t.storage_positions(np.asarray([p], np.int64))
+                for s, col in zip(t.storage_names, cols):
+                    sp[s] = int(col[0])
+        return sp
+
+    def base_offset(self, path: Mapping[str, int]) -> int:
+        return self.base.base_offset(self._storage_path(path))
+
+    def leaf_offsets(self, path: Mapping[str, int],
+                     positions: np.ndarray) -> np.ndarray:
+        """Vectorised logical→storage offsets for a leaf block on the
+        deepest logical axis — the vector-leaf fast path stays intact
+        under transforms (a merged storage-minor pair keeps logical runs
+        byte-contiguous by construction)."""
+        off = self.base.base_offset(self._storage_path(path))
+        leaf = self.next_axis(path)
+        pos = np.asarray(positions, np.int64)
+        t = self._transforms.get(leaf)
+        if t is None:
+            return off + pos * self.base.stride(leaf)
+        out = np.full(len(pos), off, np.int64)
+        for s, col in zip(t.storage_names, t.storage_positions(pos)):
+            out += col * self.base.stride(s)
+        return out
+
+    @property
+    def n_elements(self) -> int:
+        return self.base.n_elements
+
+    def axis_periods(self) -> dict[str, float]:
+        out = dict(self.base.axis_periods())
+        for t in self._transforms.values():
+            for s in t.storage_names:
+                out.pop(s, None)
+            if t.period is not None:
+                out[t.logical_name] = t.period
+        return out
+
 
 class BranchingDatacube(Datacube):
     """Leading categorical axis selecting heterogeneous child cubes
@@ -235,3 +372,9 @@ class BranchingDatacube(Datacube):
     @property
     def n_elements(self) -> int:
         return int(self._bases[-1])
+
+    def axis_periods(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for c in self._children:
+            out.update(c.axis_periods())
+        return out

@@ -126,7 +126,9 @@ class TraditionalExtractor:
         if isinstance(dc, OctahedralGridDatacube):
             lead_names = dc._lead_names
             field_elems = dc.points_per_field
-        elif isinstance(dc, TensorDatacube):
+        elif hasattr(dc, "axis_names"):
+            # regular or transformed cube: fields are the trailing
+            # (logical) field axes, everything else is a lead axis
             lead_names = tuple(n for n in dc.axis_names
                                if n not in self.field_axes)
             field_elems = int(np.prod([len(dc.axis(n, {})) for n in

@@ -40,18 +40,46 @@ def _quantize(arr: np.ndarray, tol: float) -> np.ndarray:
     return q + 0.0
 
 
-def _canon_value(v: Any, tol: float) -> tuple[str, str]:
+def _canon_value(v: Any, tol: float,
+                 period: float | None = None) -> tuple[str, str]:
     """Order-stable key for a Select value of any hashable type."""
     if isinstance(v, (bool, str, bytes)):
         return (type(v).__name__, repr(v))
     if isinstance(v, (int, float, np.integer, np.floating)):
         # ints and equal floats must collide (axis.find treats 5 == 5.0)
-        return ("f", repr(float(_quantize(np.array(float(v)), tol))))
+        q = float(_quantize(np.array(float(v)), tol))
+        if period:
+            # cyclic axis: canonical representative in [0, period)
+            q = float(_quantize(np.array(q - np.floor(q / period) * period),
+                                tol))
+        return ("f", repr(q))
     return (type(v).__name__, repr(v))
 
 
+def _canon_points(p: Polytope, tol: float,
+                  periods: "dict[str, float] | None") -> np.ndarray:
+    """Quantized vertex array, shifted to the canonical period window.
+
+    On each cyclic axis the polytope is translated by a whole number of
+    periods so its *minimum* coordinate lands in ``[0, period)`` —
+    seam-straddling requests shifted by whole periods therefore share
+    one representative (and one plan-cache key), while the straddle
+    itself (vertices above the period) is preserved exactly.
+    """
+    pts = _quantize(p.points, tol)
+    if periods:
+        for j, ax in enumerate(p.axes):
+            period = periods.get(ax)
+            if period:
+                k = np.floor(pts[:, j].min() / period)
+                if k:
+                    pts[:, j] = _quantize(pts[:, j] - k * period, tol)
+    return pts
+
+
 def canonical_key(polys: Sequence[Polytope], selects: Sequence["Select"],
-                  tol: float = CANON_TOL) -> tuple:
+                  tol: float = CANON_TOL,
+                  periods: "dict[str, float] | None" = None) -> tuple:
     """Canonical form of a (polytopes, selects) decomposition.
 
     Order-insensitive: union members and selects are sorted sets, select
@@ -60,27 +88,34 @@ def canonical_key(polys: Sequence[Polytope], selects: Sequence["Select"],
     index spacing cannot split equivalent requests.  Exact duplicates
     (repeated union members, repeated select values) collapse — they
     produce the same plan.
+
+    ``periods`` (axis → period, from ``Datacube.axis_periods``) folds
+    cyclic axes: each polytope/select value is shifted by whole periods
+    onto a canonical window, so period-shifted and seam-straddling
+    spellings of the same request collide (DESIGN.md §2.5).
     """
     poly_keys: set[tuple] = set()
     for p in polys:
-        pts = _quantize(p.points, tol)
+        pts = _canon_points(p, tol, periods)
         rows = tuple(sorted(set(map(tuple, pts.tolist()))))
         poly_keys.add((tuple(p.axes), rows))
     sel_vals: dict[str, set] = {}
     for s in selects:
         bucket = sel_vals.setdefault(s.axis, set())
+        period = periods.get(s.axis) if periods else None
         for v in s.values:
-            bucket.add(_canon_value(v, tol))
+            bucket.add(_canon_value(v, tol, period))
     sel_keys = tuple(sorted(
         (ax, tuple(sorted(vals))) for ax, vals in sel_vals.items()))
     return (tuple(sorted(poly_keys)), sel_keys)
 
 
 def canonical_hash(polys: Sequence[Polytope], selects: Sequence["Select"],
-                   tol: float = CANON_TOL) -> str:
+                   tol: float = CANON_TOL,
+                   periods: "dict[str, float] | None" = None) -> str:
     """Stable content hash of :func:`canonical_key` (process-independent:
     sha256 over the repr of nested tuples of strings/floats)."""
-    key = canonical_key(polys, selects, tol)
+    key = canonical_key(polys, selects, tol, periods)
     return hashlib.sha256(repr(key).encode()).hexdigest()
 
 
@@ -91,12 +126,14 @@ class Shape:
     def selects(self) -> list["Select"]:
         return []
 
-    def canonical_key(self, tol: float = CANON_TOL) -> tuple:
+    def canonical_key(self, tol: float = CANON_TOL,
+                      periods: dict[str, float] | None = None) -> tuple:
         """Canonical form of this shape's primitive decomposition."""
-        return canonical_key(self.polytopes(), self.selects(), tol)
+        return canonical_key(self.polytopes(), self.selects(), tol, periods)
 
-    def canonical_hash(self, tol: float = CANON_TOL) -> str:
-        return canonical_hash(self.polytopes(), self.selects(), tol)
+    def canonical_hash(self, tol: float = CANON_TOL,
+                       periods: dict[str, float] | None = None) -> str:
+        return canonical_hash(self.polytopes(), self.selects(), tol, periods)
 
 
 @dataclass
@@ -290,18 +327,23 @@ class Request:
             axes.add(s.axis)
         return axes
 
-    def canonical_form(self, tol: float = CANON_TOL) -> tuple:
+    def canonical_form(self, tol: float = CANON_TOL,
+                       periods: dict[str, float] | None = None) -> tuple:
         """Order-insensitive, tolerance-quantized canonical form.
 
         Two requests with equal canonical forms select the same datacube
         bytes (same primitive decomposition up to member order, select
         order/duplication, and sub-``tol`` coordinate noise), so their
         extraction plans are interchangeable — the plan cache's key
-        (DESIGN.md §4).
+        (DESIGN.md §4).  With ``periods`` (from
+        ``Datacube.axis_periods``) requests on cyclic axes are
+        additionally normalized modulo the period, so seam-straddling
+        requests shifted by whole periods collide too (DESIGN.md §2.5).
         """
-        return canonical_key(self.polytopes(), self.selects(), tol)
+        return canonical_key(self.polytopes(), self.selects(), tol, periods)
 
-    def canonical_hash(self, tol: float = CANON_TOL) -> str:
+    def canonical_hash(self, tol: float = CANON_TOL,
+                       periods: dict[str, float] | None = None) -> str:
         """Stable sha256 content hash of :meth:`canonical_form`.
 
         Memoized per Request object (decomposition — e.g. ear-clipping a
@@ -309,11 +351,13 @@ class Request:
         hashed exactly once).  Mutating ``shapes`` after the first call
         is not supported.
         """
+        pkey = tuple(sorted(periods.items())) if periods else ()
         cache = self.__dict__.setdefault("_canon_hashes", {})
-        h = cache.get(tol)
+        h = cache.get((tol, pkey))
         if h is None:
-            h = canonical_hash(self.polytopes(), self.selects(), tol)
-            cache[tol] = h
+            h = canonical_hash(self.polytopes(), self.selects(), tol,
+                               periods)
+            cache[(tol, pkey)] = h
         return h
 
 

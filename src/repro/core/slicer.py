@@ -20,6 +20,22 @@ Beyond the paper (host-side perf, see DESIGN.md §3):
  * the final ordered axis emits **vector leaf blocks** instead of one
    node + one 1-D slice object per index — the 1-D slices the paper
    shows dominate runtime collapse into one numpy range query.
+
+Coordinate frames (DESIGN.md §2.5): Algorithm 1 runs entirely in
+**logical** coordinates — the axes the datacube presents, which for a
+``TransformedDatacube`` may be cyclic (seam-straddling ranges split into
+canonical in-period sub-intervals by ``CyclicAxis``), merged, or mapped.
+The *positions* those axes return are already the datacube's own index
+space, and ``ExtractionPlan`` offsets are resolved by the datacube in
+**storage** coordinates; the slicer never converts between the two.
+Both fast paths survive transforms unchanged: vector leaves delegate to
+``Datacube.leaf_offsets`` (which vectorises the logical→storage map) and
+shared-box slicing only touches logical geometry.
+
+``fast_paths=False`` disables the vector-leaf and shared-box fast paths
+so every index walks the per-index slicing path — the reference
+executor for the fast-path parity differential suite
+(tests/test_fastpath_parity.py); production callers never set it.
 """
 
 from __future__ import annotations
@@ -74,8 +90,9 @@ class _Item:
 class Slicer:
     """Algorithm 1 executor over any :class:`Datacube`."""
 
-    def __init__(self, datacube: Datacube):
+    def __init__(self, datacube: Datacube, fast_paths: bool = True):
         self.datacube = datacube
+        self.fast_paths = fast_paths
 
     def build_index_tree(self, request: Request) -> tuple[IndexNode, SliceStats]:
         t0 = time.perf_counter()
@@ -186,7 +203,8 @@ class Slicer:
         is_last_axis = remaining_after is None
         poly_dim = 0 if poly is None else poly.ndim
 
-        if is_last_axis and not other_polys and not selects and poly_dim <= 1:
+        if (self.fast_paths and is_last_axis and not other_polys
+                and not selects and poly_dim <= 1):
             # Vector leaf fast path: these are the paper's 1-D slices —
             # emitted as one array block (counted, not materialised).
             item.node.add_leaf_block(axis_name, pos, vals)
@@ -202,7 +220,8 @@ class Slicer:
         # tolerance), the per-index path below does — and counts — the
         # slicing instead.
         shared_box = None
-        if poly is not None and poly.is_box and poly.ndim > 1:
+        if (self.fast_paths and poly is not None and poly.is_box
+                and poly.ndim > 1):
             t0 = time.perf_counter()
             shared_box = poly.slice_at(axis_name,
                                        float(vals[len(vals) // 2]))

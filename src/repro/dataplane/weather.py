@@ -5,6 +5,12 @@ Builds the O-grid cube the paper's Table 1 measures against (O1280 ⇒
 physical fields, and exposes the domain-level requests: country
 extraction, time-series, vertical profiles, flight paths.
 
+:class:`IrregularWeatherCube` is the *Beyond Standard Datacubes*
+scenario: merged date/time, mapped Gaussian latitudes, and a cyclic
+longitude crossed by the UK polygon — a transformed view over regular
+storage, with a :meth:`~IrregularWeatherCube.materialized` oracle for
+the differential test harness.
+
 Country boundaries are coarse public-domain polygon approximations —
 byte counts depend only on area/geometry, which these preserve.
 """
@@ -15,8 +21,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import (Box, Disk, OctahedralGridDatacube, OrderedAxis,
-                        Path, Point, Polygon, Request, Select, Span)
+from repro.core import (Box, CyclicTransform, Disk, MappedTransform,
+                        MergedTransform, OctahedralGridDatacube, OrderedAxis,
+                        Path, Point, Polygon, Request, Select, Span,
+                        TensorDatacube, TransformedDatacube)
 
 # (lat, lon) vertex rings — coarse but area-faithful country outlines
 COUNTRIES: dict[str, np.ndarray] = {
@@ -36,6 +44,12 @@ COUNTRIES: dict[str, np.ndarray] = {
         [64.5, 10.5], [67.3, 14.0], [69.5, 18.0], [71.0, 25.8],
         [70.1, 30.8], [69.0, 29.0], [68.4, 22.0], [65.0, 13.5],
         [63.0, 11.5], [60.0, 12.5], [59.0, 11.0]], dtype=np.float64),
+    # The UK outline straddles the 0°/360° longitude seam (lon −6.6…1.7):
+    # the cross-seam scenario for cyclic-axis extraction (DESIGN.md §2.5).
+    "uk": np.array([
+        [58.6, -5.0], [57.6, -1.9], [54.6, -0.5], [52.9, 1.7],
+        [51.1, 1.4], [50.1, -5.7], [51.6, -4.9], [53.4, -4.6],
+        [54.4, -3.2], [55.5, -5.8], [57.0, -6.6]], dtype=np.float64),
     "italy": np.array([
         [46.6, 10.4], [46.4, 13.7], [44.8, 12.4], [43.5, 14.0],
         [41.9, 16.1], [40.0, 18.5], [39.8, 16.6], [38.0, 16.1],
@@ -117,6 +131,121 @@ class WeatherCube:
                    [0.5, width / 2, width / 2])
         return Request([
             Path(("time", "level", "lat", "lon"), base, waypoints)])
+
+
+def gaussian_latitudes(n: int) -> np.ndarray:
+    """``n`` Gaussian-quadrature latitudes, north→south (degrees).
+
+    Legendre nodes cluster toward the poles — genuinely irregular
+    spacing, the reduced-grid latitude ladder of production NWP output.
+    """
+    nodes, _ = np.polynomial.legendre.leggauss(n)
+    return np.degrees(np.arcsin(nodes))[::-1].copy()
+
+
+@dataclass
+class IrregularWeatherCube:
+    """Production-shaped irregular datacube (*Beyond Standard Datacubes*):
+
+    * **merged** date + time-of-day axes presented as one ``datetime``
+      logical axis (seconds);
+    * **mapped** Gaussian latitudes — storage holds plain row indices,
+      the logical ``lat`` axis carries the irregularly spaced physical
+      coordinates;
+    * **cyclic** ``lon`` with period 360° — requests (e.g. the UK
+      polygon) may straddle the 0°/360° seam.
+
+    Storage is a regular ``TensorDatacube``; all irregularity lives in
+    the transform layer, so :meth:`materialized` can build the
+    explicitly unrolled/merged/remapped equivalent cube with the *same*
+    flat layout — the oracle for the differential test harness
+    (tests/test_transforms.py).
+    """
+
+    n_dates: int = 2
+    times_per_day: int = 4
+    n_levels: int = 3
+    n_lat: int = 96
+    n_lon: int = 192
+    dtype: np.dtype = np.dtype(np.float64)
+
+    def __post_init__(self):
+        self.date_values = np.arange(self.n_dates) * 86400.0
+        self.time_values = np.arange(self.times_per_day) * (
+            86400.0 / self.times_per_day)
+        self.latitudes = gaussian_latitudes(self.n_lat)
+        self.lon_values = 360.0 * np.arange(self.n_lon) / self.n_lon
+        base = TensorDatacube([
+            OrderedAxis("date", self.date_values),
+            OrderedAxis("time", self.time_values),
+            OrderedAxis("level", np.arange(float(self.n_levels))),
+            OrderedAxis("lat_row", np.arange(float(self.n_lat))),
+            OrderedAxis("lon", self.lon_values),
+        ], dtype=self.dtype)
+        self.transforms = [
+            MergedTransform("datetime", ("date", "time")),
+            MappedTransform("lat", "lat_row", values=self.latitudes),
+            CyclicTransform("lon", period=360.0),
+        ]
+        self.cube = TransformedDatacube(base, self.transforms)
+
+    @property
+    def datetime_values(self) -> np.ndarray:
+        return (self.date_values[:, None] +
+                self.time_values[None, :]).ravel()
+
+    def materialized(self) -> TensorDatacube:
+        """The explicitly merged/remapped cube over plain axes — same
+        flat storage layout, so plans against it are the byte-exact
+        reference for transformed extraction (cross-seam requests must
+        be split manually; see tests/test_transforms.py)."""
+        return TensorDatacube([
+            OrderedAxis("datetime", self.datetime_values),
+            OrderedAxis("level", np.arange(float(self.n_levels))),
+            OrderedAxis("lat", self.latitudes),
+            OrderedAxis("lon", self.lon_values),
+        ], dtype=self.dtype)
+
+    # -- synthetic physical payload ----------------------------------------
+    def field_data(self, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        lat_r = np.radians(self.latitudes)
+        lon_r = np.radians(self.lon_values)
+        grid = (15.0 * np.cos(lat_r)[:, None] +
+                5.0 * np.sin(2 * lon_r)[None, :] * np.cos(lat_r)[:, None])
+        n_dt = self.n_dates * self.times_per_day
+        out = np.empty((n_dt, self.n_levels, self.n_lat, self.n_lon),
+                       self.dtype)
+        for t in range(n_dt):
+            for l in range(self.n_levels):
+                out[t, l] = grid + 0.5 * l + 1e-4 * t + rng.normal(0, 0.05)
+        return out.reshape(-1)
+
+    # -- domain-specific interface -----------------------------------------
+    def country_request(self, name: str, datetime: float = 0.0,
+                        level: float = 0.0) -> Request:
+        """Country crop; ``uk`` straddles the longitude seam."""
+        return Request([Select("datetime", [datetime]),
+                        Select("level", [level]),
+                        Polygon(("lat", "lon"), COUNTRIES[name])])
+
+    def timeseries_request(self, lat: float, lon: float, t0: float,
+                           t1: float, level: float = 0.0) -> Request:
+        """Point time-series; a [t0, t1] spanning a date boundary crosses
+        the merged date/time storage split transparently."""
+        return Request([Span("datetime", t0, t1), Select("level", [level]),
+                        Select("lat", [lat]), Select("lon", [lon])])
+
+    def seam_box_request(self, lat_lo: float, lat_hi: float,
+                         lon_lo: float, lon_hi: float,
+                         datetime: float = 0.0,
+                         level: float = 0.0) -> Request:
+        """Axis-aligned crop in unwrapped lon coordinates (may straddle
+        the seam, e.g. lon −20…20)."""
+        return Request([Select("datetime", [datetime]),
+                        Select("level", [level]),
+                        Box(("lat", "lon"), [lat_lo, lon_lo],
+                            [lat_hi, lon_hi])])
 
 
 # Default spot locations for serving mixes: London, Paris, New York,

@@ -128,11 +128,17 @@ class ExtractionService:
     """
 
     def __init__(self, datacube: Datacube, capacity: int = 1024,
-                 use_kernel: bool = False, tol: float = CANON_TOL):
+                 use_kernel: bool = False, tol: float = CANON_TOL,
+                 periods: dict[str, float] | None = None):
         self.datacube = datacube
         self.extractor = PolytopeExtractor(datacube, use_kernel=use_kernel)
         self.cache = PlanCache(capacity)
         self.tol = tol
+        # Cyclic-axis periods fold into the cache key: seam-straddling
+        # requests shifted by whole periods hash identically, so the
+        # plan cache hits across the seam (DESIGN.md §2.5).
+        self.periods = dict(periods) if periods is not None \
+            else datacube.axis_periods()
         self._lock = threading.Lock()
 
     @property
@@ -146,7 +152,7 @@ class ExtractionService:
         Returns ``(plan, cached, key)``; a hit returns the exact plan
         object built on the cold miss.
         """
-        key = request.canonical_hash(self.tol)
+        key = request.canonical_hash(self.tol, self.periods)
         with self._lock:
             plan = self.cache.get(key)
             if plan is not None:
@@ -171,7 +177,7 @@ class ExtractionService:
         ``flat_data`` is given — all distinct plans are gathered through
         a single coalesced union read shared across the batch.
         """
-        keys = [r.canonical_hash(self.tol) for r in requests]
+        keys = [r.canonical_hash(self.tol, self.periods) for r in requests]
         results: list[ServiceResult] = []
         batch_plans: dict[str, ExtractionPlan] = {}
 

@@ -69,6 +69,23 @@ class TestCyclicAxis:
         pos, _ = ax.indices_in_range(-360.0, 359.0)
         assert len(pos) == len(set(pos.tolist()))
 
+    def test_nearest_wraps_across_seam(self):
+        ax = CyclicAxis("lon", np.arange(0.0, 360.0, 30.0), period=360.0)
+        # 350° is 10° from 0 (across the seam) but 20° from 330
+        assert ax.nearest(350.0) == (0, 0.0)
+        # out-of-period values fold before snapping
+        assert ax.nearest(710.0) == (0, 0.0)
+        assert ax.nearest(-14.0) == (0, 0.0)
+        assert ax.nearest(-16.0) == (11, 330.0)
+        # mid-axis values are untouched by the seam override
+        assert ax.nearest(151.0) == (5, 150.0)
+
+    def test_nearest_wrap_respects_storage_order(self):
+        vals = np.arange(0.0, 360.0, 30.0)[::-1]    # stored descending
+        ax = CyclicAxis("lon", vals, period=360.0)
+        pos, val = ax.nearest(355.0)
+        assert val == 0.0 and vals[pos] == 0.0
+
 
 class TestCategoricalAxis:
     def test_find(self):

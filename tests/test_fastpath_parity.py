@@ -1,0 +1,111 @@
+"""Fast-path parity: the vector-leaf and shared-box shortcuts in the
+slicer are pure optimisations — ``Slicer(cube, fast_paths=False)`` runs
+the per-index reference expansion of Algorithm 1, and both executors
+must emit identical plans and identical §5.2 slice accounting, on plain
+and on transformed (merged/mapped/cyclic) datacubes alike."""
+
+import numpy as np
+
+from repro.core import (Box, ConvexPolytope, Disk, OrderedAxis, Request,
+                        Select, Slicer, Span, TensorDatacube, Union)
+from repro.dataplane.weather import IrregularWeatherCube
+
+
+def grid_cube(n=10, names=("a", "b", "c")):
+    return TensorDatacube(
+        [OrderedAxis(nm, np.arange(float(n))) for nm in names])
+
+
+def assert_parity(cube, request):
+    plan_f, stats_f = Slicer(cube).extract_plan(request)
+    plan_r, stats_r = Slicer(cube, fast_paths=False).extract_plan(request)
+    np.testing.assert_array_equal(np.sort(plan_f.offsets),
+                                  np.sort(plan_r.offsets))
+    # identical accounting: the shortcuts must report what the per-index
+    # path would have counted, not what they skipped
+    assert stats_f.n_slices == stats_r.n_slices
+    assert stats_f.n_slices_by_dim == stats_r.n_slices_by_dim
+    # §5.2 bound holds on both executors
+    for stats in (stats_f, stats_r):
+        assert sum(stats.n_slices_by_dim.values()) == stats.n_slices
+    return plan_f, stats_f
+
+
+class TestFastPathParity:
+    def test_box_hits_both_shortcuts(self):
+        # nd box → shared-box path; its leaf rows → vector-leaf path
+        assert_parity(grid_cube(),
+                      Request([Box(("a", "b", "c"), [1, 1, 1], [5, 6, 4])]))
+
+    def test_polytope_leaf_rows(self):
+        verts = np.array([[0, 0, 0], [8, 0, 0], [0, 8, 0], [0, 0, 8]],
+                         float)
+        assert_parity(grid_cube(),
+                      Request([ConvexPolytope(("a", "b", "c"), verts)]))
+
+    def test_select_plus_disk(self):
+        assert_parity(grid_cube(),
+                      Request([Select("a", [2.0, 5.0]),
+                               Disk(("b", "c"), (4.0, 4.0), 2.5)]))
+
+    def test_union_of_overlapping_boxes(self):
+        assert_parity(grid_cube(), Request([
+            Union([Box(("a", "b"), [0, 0], [4, 4]),
+                   Box(("a", "b"), [3, 3], [7, 7])]),
+            Span("c", 1.0, 3.0)]))
+
+    def test_randomized_requests(self):
+        rng = np.random.default_rng(42)
+        cube = grid_cube()
+        for _ in range(20):
+            lo = rng.uniform(0, 5, size=3)
+            hi = lo + rng.uniform(0.5, 4.5, size=3)
+            req = Request([Box(("a", "b", "c"), list(lo), list(hi))])
+            plan, stats = assert_parity(cube, req)
+            # §5.2: box slice count equals the exact bound Σ_i Π_{j≤i} n_j
+            ns = [len(cube.axis(nm, {}).indices_in_range(l, h)[0])
+                  for nm, l, h in zip("abc", lo, hi)]
+            assert stats.n_slices == ns[0] + ns[0] * ns[1] + \
+                ns[0] * ns[1] * ns[2]
+            assert plan.n_points == ns[0] * ns[1] * ns[2]
+
+    def test_randomized_polytopes(self):
+        rng = np.random.default_rng(43)
+        cube = grid_cube()
+        for _ in range(10):
+            verts = rng.uniform(0, 9, size=(5, 2))
+            assert_parity(cube, Request([
+                Select("a", [float(rng.integers(0, 10))]),
+                ConvexPolytope(("b", "c"), verts)]))
+
+
+class TestFastPathParityTransformed:
+    """Same parity contract through the axis-transform layer
+    (DESIGN.md §2.5): logical-coordinate planning, storage-coordinate
+    offsets."""
+
+    def setup_method(self):
+        self.iwc = IrregularWeatherCube(n_dates=2, times_per_day=3,
+                                        n_levels=2, n_lat=16, n_lon=24)
+
+    def test_cross_seam_box(self):
+        assert_parity(self.iwc.cube,
+                      self.iwc.seam_box_request(20.0, 70.0, -30.0, 30.0))
+
+    def test_country_polygon(self):
+        assert_parity(self.iwc.cube, self.iwc.country_request("uk"))
+
+    def test_timeseries_across_midnight(self):
+        assert_parity(self.iwc.cube,
+                      self.iwc.timeseries_request(51.5, 0.0, 0.0,
+                                                  86400.0 + 43200.0))
+
+    def test_randomized_cyclic_spans(self):
+        rng = np.random.default_rng(44)
+        for _ in range(15):
+            lo = rng.uniform(-400, 400)
+            req = Request([Select("datetime", [0.0]),
+                           Select("level", [0.0]),
+                           Span("lat", -60.0, 60.0),
+                           Span("lon", lo, lo + rng.uniform(0, 400))])
+            assert_parity(self.iwc.cube, req)

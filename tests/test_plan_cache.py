@@ -1,5 +1,10 @@
 """Plan-cache semantics: canonical hashing, LRU behaviour, and the
-extraction service (DESIGN.md §4)."""
+extraction service (DESIGN.md §4).
+
+The canonical-hash invariants are also checked property-style at the
+bottom of this module: a seeded-rng class that always runs, and a
+hypothesis class that deepens the search when hypothesis is installed
+(skipped cleanly otherwise — the container does not ship it)."""
 
 import numpy as np
 import pytest
@@ -8,6 +13,12 @@ from repro.core import (Box, ConvexPolytope, Disk, OrderedAxis, Request,
                         Select, Slicer, Span, TensorDatacube, Union)
 from repro.dataplane.pipeline import CachedExtractionSource, Prefetcher
 from repro.serve.extraction import ExtractionService, PlanCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def small_cube(n=12, names=("a", "b", "c")):
@@ -179,3 +190,122 @@ class TestPrefetcherReusesPlans:
         assert svc.stats.hits >= 4               # later steps all hit
         ref, _ = Slicer(cube).extract_plan(crops[0])
         np.testing.assert_array_equal(out[4][1].values, data[ref.offsets])
+
+
+# ---------------------------------------------------------------------------
+# Property-style canonical-hash invariants (ROADMAP: cache-key hardening).
+# Base coordinates sit on the integer grid so CANON_TOL (1e-9) quantization
+# is exact; jitter ≤ 2e-10 stays inside one quantum, 1e-6 jumps ~1000.
+# ---------------------------------------------------------------------------
+
+def _member(kind, p):
+    """Small 2-D shape from 4 integer params (quantization-stable)."""
+    p = [float(v) for v in p]
+    if kind == 0:
+        return Box(("a", "b"), [p[0], p[1]], [p[0] + p[2], p[1] + p[3]])
+    if kind == 1:
+        return Disk(("a", "b"), (p[0], p[1]), 1.0 + p[2])
+    return ConvexPolytope(("a", "b"), np.array(
+        [[p[0], p[1]], [p[0] + p[2], p[1]], [p[0], p[1] + p[3]]]))
+
+
+_TRI = np.array([[0.0, 0.0], [7.0, 0.0], [0.0, 7.0]])
+
+
+class TestCanonicalHashSeededProperties:
+    """Seeded-rng versions of the hypothesis properties below — always run."""
+
+    def test_union_member_permutation_collides(self):
+        rng = np.random.default_rng(7)
+        for _ in range(25):
+            n = int(rng.integers(2, 5))
+            members = [_member(int(rng.integers(0, 3)),
+                               rng.integers(0, 6, size=4))
+                       for _ in range(n)]
+            perm = [members[i] for i in rng.permutation(n)]
+            assert (Request([Union(members), Select("c", [1.0])])
+                    .canonical_hash() ==
+                    Request([Union(perm), Select("c", [1.0])])
+                    .canonical_hash())
+
+    def test_duplicate_select_labels_collide(self):
+        rng = np.random.default_rng(8)
+        for _ in range(25):
+            vals = [float(v) for v in
+                    rng.integers(0, 6, size=int(rng.integers(1, 6)))]
+            dup = vals + [vals[int(rng.integers(0, len(vals)))]]
+            rng.shuffle(dup)
+            assert (Request([Select("c", sorted(set(vals)))]).canonical_hash()
+                    == Request([Select("c", dup)]).canonical_hash())
+
+    def test_sub_tolerance_jitter_collides(self):
+        rng = np.random.default_rng(9)
+        h0 = Request([ConvexPolytope(("a", "b"), _TRI)]).canonical_hash()
+        for _ in range(25):
+            jitter = rng.uniform(-2e-10, 2e-10, size=_TRI.shape)
+            assert (Request([ConvexPolytope(("a", "b"), _TRI + jitter)])
+                    .canonical_hash() == h0)
+
+    def test_super_tolerance_perturbation_differs(self):
+        rng = np.random.default_rng(10)
+        h0 = Request([ConvexPolytope(("a", "b"), _TRI)]).canonical_hash()
+        for _ in range(25):
+            shift = np.zeros_like(_TRI)
+            shift[rng.integers(0, 3), rng.integers(0, 2)] = (
+                float(rng.choice([-1.0, 1.0])) * rng.uniform(1e-6, 1e-3))
+            assert (Request([ConvexPolytope(("a", "b"), _TRI + shift)])
+                    .canonical_hash() != h0)
+
+
+if HAVE_HYPOTHESIS:
+    _coord = st.integers(0, 6)
+    _params = st.tuples(_coord, _coord,
+                        st.integers(1, 5), st.integers(1, 5))
+    _members = st.lists(st.tuples(st.integers(0, 2), _params),
+                        min_size=2, max_size=4)
+    _props = settings(deadline=None, max_examples=40)
+
+    class TestCanonicalHashHypothesis:
+        @_props
+        @given(specs=_members, data=st.data())
+        def test_union_member_permutation_collides(self, specs, data):
+            members = [_member(k, p) for k, p in specs]
+            order = data.draw(st.permutations(range(len(members))))
+            perm = [members[i] for i in order]
+            assert (Request([Union(members)]).canonical_hash()
+                    == Request([Union(perm)]).canonical_hash())
+
+        @_props
+        @given(vals=st.lists(st.integers(0, 6), min_size=1, max_size=5),
+               data=st.data())
+        def test_duplicate_select_labels_collide(self, vals, data):
+            vals = [float(v) for v in vals]
+            dup = vals + [data.draw(st.sampled_from(vals))]
+            dup = data.draw(st.permutations(dup))
+            assert (Request([Select("c", sorted(set(vals)))]).canonical_hash()
+                    == Request([Select("c", list(dup))]).canonical_hash())
+
+        @_props
+        @given(jitter=st.lists(
+            st.floats(-2e-10, 2e-10, allow_nan=False, allow_infinity=False),
+            min_size=6, max_size=6))
+        def test_sub_tolerance_jitter_collides(self, jitter):
+            j = np.array(jitter).reshape(3, 2)
+            assert (Request([ConvexPolytope(("a", "b"), _TRI + j)])
+                    .canonical_hash() ==
+                    Request([ConvexPolytope(("a", "b"), _TRI)])
+                    .canonical_hash())
+
+        @_props
+        @given(vi=st.integers(0, 2), ci=st.integers(0, 1),
+               sign=st.sampled_from([-1.0, 1.0]),
+               delta=st.floats(1e-6, 1e-3, allow_nan=False,
+                               allow_infinity=False))
+        def test_super_tolerance_perturbation_differs(self, vi, ci, sign,
+                                                      delta):
+            shift = np.zeros_like(_TRI)
+            shift[vi, ci] = sign * delta
+            assert (Request([ConvexPolytope(("a", "b"), _TRI + shift)])
+                    .canonical_hash() !=
+                    Request([ConvexPolytope(("a", "b"), _TRI)])
+                    .canonical_hash())

@@ -1,0 +1,125 @@
+"""Hypothesis differential suite for the axis-transform layer
+(DESIGN.md §2.5): for *any* request, extraction through a transformed
+axis is byte-identical to extraction against the explicitly
+materialized (unrolled/merged/remapped) datacube, and seam-straddling
+cyclic requests shifted by whole periods share one canonical hash.
+
+Seeded-rng versions of the same invariants always run in
+tests/test_transforms.py; this module deepens the search when
+hypothesis is installed and skips cleanly when it is not.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (Box, Request, Select, Slicer, Span,
+                        Union)  # noqa: E402
+from repro.dataplane.weather import IrregularWeatherCube  # noqa: E402
+
+settings.register_profile("repro", deadline=None, max_examples=30)
+settings.load_profile("repro")
+
+PERIOD = 360.0
+
+# One shared small cube per module: construction is pure, plans are
+# independent per request.
+IWC = IrregularWeatherCube(n_dates=2, times_per_day=3, n_levels=2,
+                           n_lat=16, n_lon=24)
+TDC = IWC.cube
+MAT = IWC.materialized()
+DATA = IWC.field_data(seed=99)
+
+
+def split_lon_span(lo, hi, period=PERIOD):
+    if hi - lo >= period:
+        return [(0.0, period)]
+    k = np.floor(lo / period)
+    lo, hi = lo - k * period, hi - k * period
+    if hi < period:
+        return [(lo, hi)]
+    # hi lands on/over the seam: the wrapped tail [0, hi-period] is part
+    # of the interval (hi == period includes stored value 0 exactly)
+    return [(lo, period), (0.0, hi - period)]
+
+
+def assert_byte_identical(req_t, req_m):
+    plan_t, _ = Slicer(TDC).extract_plan(req_t)
+    plan_m, _ = Slicer(MAT).extract_plan(req_m)
+    np.testing.assert_array_equal(np.sort(plan_t.offsets),
+                                  np.sort(plan_m.offsets))
+    np.testing.assert_array_equal(DATA[np.sort(plan_t.offsets)],
+                                  DATA[np.sort(plan_m.offsets)])
+
+
+finite = dict(allow_nan=False, allow_infinity=False)
+
+
+class TestDifferentialProperties:
+    @given(lo=st.floats(-800.0, 800.0, **finite),
+           width=st.floats(0.0, 700.0, **finite),
+           lat_lo=st.floats(-90.0, 80.0, **finite),
+           lat_w=st.floats(0.0, 60.0, **finite))
+    def test_cyclic_span_matches_manual_seam_split(self, lo, width,
+                                                   lat_lo, lat_w):
+        hi = lo + width
+        shapes = [Select("datetime", [0.0]), Select("level", [0.0]),
+                  Span("lat", lat_lo, lat_lo + lat_w)]
+        req_t = Request(shapes + [Span("lon", lo, hi)])
+        req_m = Request(shapes + [Union([Span("lon", a, b) for a, b in
+                                         split_lon_span(lo, hi)])])
+        assert_byte_identical(req_t, req_m)
+
+    @given(t0=st.floats(-1e4, 2 * 86400.0, **finite),
+           dt=st.floats(0.0, 86400.0, **finite),
+           la0=st.floats(-90.0, 85.0, **finite),
+           law=st.floats(0.0, 90.0, **finite),
+           lo0=st.floats(0.0, 300.0, **finite),
+           low=st.floats(0.0, 59.0, **finite))
+    def test_merged_mapped_box_matches_materialized(self, t0, dt, la0, law,
+                                                    lo0, low):
+        # in-period lon: the merged/mapped axes are the moving parts here
+        req = Request([Span("datetime", t0, t0 + dt),
+                       Box(("lat", "lon"), [la0, lo0],
+                           [la0 + law, lo0 + low])])
+        assert_byte_identical(req, req)
+
+    @given(level=st.sampled_from([0.0, 1.0]),
+           lat=st.floats(-89.0, 89.0, **finite),
+           lon=st.floats(-360.0, 720.0, **finite))
+    def test_point_select_matches_materialized_in_period(self, level, lat,
+                                                         lon):
+        # Select snapping wraps on the transformed cube; fold lon into
+        # the stored period so both cubes snap identically, then demand
+        # byte identity.
+        lon_c = lon % PERIOD
+        # avoid the seam neighbourhood where cyclic snapping (correctly)
+        # differs from plain nearest-on-axis
+        step = PERIOD / IWC.n_lon
+        if min(lon_c, PERIOD - lon_c) < step:
+            lon_c = 3 * step
+        req = Request([Select("datetime", [0.0]), Select("level", [level]),
+                       Select("lat", [lat]), Select("lon", [lon_c])])
+        assert_byte_identical(req, req)
+
+
+class TestSeamHashProperties:
+    @given(lo=st.floats(-360.0, 360.0, **finite),
+           width=st.floats(0.5, 350.0, **finite),
+           k=st.integers(-3, 3))
+    def test_period_shift_preserves_hash(self, lo, width, k):
+        p = {"lon": PERIOD}
+        r0 = Request([Span("lon", lo, lo + width)])
+        rk = Request([Span("lon", lo + k * PERIOD, lo + width + k * PERIOD)])
+        assert r0.canonical_hash(periods=p) == rk.canonical_hash(periods=p)
+
+    @given(lo=st.floats(-180.0, 180.0, **finite),
+           width=st.floats(0.5, 350.0, **finite),
+           eps=st.floats(1.0, 5.0, **finite))
+    def test_distinct_widths_stay_distinct(self, lo, width, eps):
+        p = {"lon": PERIOD}
+        r0 = Request([Span("lon", lo, lo + width)])
+        r1 = Request([Span("lon", lo, lo + width + eps)])
+        assert r0.canonical_hash(periods=p) != r1.canonical_hash(periods=p)
