@@ -1,0 +1,72 @@
+"""Bench-trajectory schema check.
+
+``BENCH_*.json`` files carry the perf trajectory PR-over-PR; a file that
+stops parsing or silently drops a column rots the trajectory without
+failing anything.  This tiny checker pins the contract for
+``BENCH_extraction.json``: valid JSON, a ``bench`` tag, a non-empty
+``rows`` list, and every row carrying the expected keys with numeric
+byte/point columns.
+"""
+
+from __future__ import annotations
+
+import json
+import numbers
+from pathlib import Path
+
+from .diagnostics import Diagnostic
+
+# key → required type (None = any JSON value)
+EXTRACTION_ROW_SCHEMA: dict[str, type | None] = {
+    "example": str,
+    "polytope_bytes": numbers.Number,
+    "bbox_bytes": numbers.Number,
+    "traditional_bytes": numbers.Number,
+    "n_points": numbers.Number,
+    "reduction_vs_traditional": numbers.Number,
+    "reduction_vs_bbox": numbers.Number,
+    "plan_time_s": numbers.Number,
+}
+
+
+def check_bench_file(path: str | Path,
+                     row_schema: dict | None = None) -> list[Diagnostic]:
+    path = Path(path)
+    schema = row_schema if row_schema is not None else EXTRACTION_ROW_SCHEMA
+    rel = path.name
+    if not path.exists():
+        return [Diagnostic("bench-schema", "file does not exist",
+                           file=rel)]
+    try:
+        payload = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [Diagnostic("bench-schema", f"invalid JSON: {e}",
+                           file=rel, line=e.lineno)]
+    diags: list[Diagnostic] = []
+    if not isinstance(payload, dict) or "bench" not in payload:
+        diags.append(Diagnostic(
+            "bench-schema", "top level must be an object with a 'bench' "
+            "tag", file=rel))
+        return diags
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        diags.append(Diagnostic(
+            "bench-schema", "'rows' must be a non-empty list", file=rel))
+        return diags
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            diags.append(Diagnostic(
+                "bench-schema", f"rows[{i}] is not an object", file=rel))
+            continue
+        for key, typ in schema.items():
+            if key not in row:
+                diags.append(Diagnostic(
+                    "bench-schema",
+                    f"rows[{i}] ({row.get('example', '?')}) is missing "
+                    f"key {key!r}", file=rel))
+            elif typ is not None and not isinstance(row[key], typ):
+                diags.append(Diagnostic(
+                    "bench-schema",
+                    f"rows[{i}].{key} should be {typ.__name__}, got "
+                    f"{type(row[key]).__name__}", file=rel))
+    return diags

@@ -27,6 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._casting import checked_cast_i32, ensure_i32_addressable
 from repro.kernels.slice import ref as slice_ref
 
 
@@ -81,10 +82,13 @@ def batched_plan_2d(verts: jax.Array, valid: jax.Array,
         (axis1[jnp.clip(col_ids, 0, n1 - 1)] <= hi1[:, None] + 1e-6) & \
         hit[:, None]
 
-    offsets = jnp.where(
+    # n0/n1 are static, so this guard runs at trace time: a grid whose
+    # flat offsets overflow int32 fails loudly instead of truncating.
+    ensure_i32_addressable(n0 * n1, what="batched_plan_2d grid")
+    offsets = checked_cast_i32(jnp.where(
         col_ok,
         row_ids.reshape(-1)[:, None] * n1 + jnp.clip(col_ids, 0, n1 - 1),
-        -1).astype(jnp.int32)
+        -1), what="batched_plan_2d offsets", allow_negative_one=True)
     offsets = offsets.reshape(p, max_rows, max_cols)
     n_points = jnp.sum(offsets >= 0, axis=(1, 2))
     return offsets, n_points

@@ -40,9 +40,10 @@ class ExtractResult:
 class PolytopeExtractor:
     """Plan on host (float64 geometry), gather on host or device."""
 
-    def __init__(self, datacube: Datacube, use_kernel: bool = False):
+    def __init__(self, datacube: Datacube, use_kernel: bool = False,
+                 verify: bool = False):
         self.datacube = datacube
-        self.slicer = Slicer(datacube)
+        self.slicer = Slicer(datacube, verify=verify)
         self.use_kernel = use_kernel
 
     def plan(self, request: Request) -> tuple[ExtractionPlan, SliceStats]:

@@ -141,6 +141,16 @@ def flatten(root: IndexNode, datacube: Datacube) -> ExtractionPlan:
         col = np.concatenate(cols)
         if len(col) == n_total:
             coords[ax_name] = col
+    # Plans are emitted in ascending storage order: runs become ascending
+    # burst reads and sortedness is a checkable invariant
+    # (repro.analysis.plan_check).  Tree-walk order is *almost* storage
+    # order already, but e.g. a seam-straddling cyclic range emits the
+    # wrapped sub-interval after the unwrapped one; the coordinate
+    # columns are permuted in lockstep so point↔coord pairing is intact.
+    order = np.argsort(offs, kind="stable")
+    if not np.array_equal(order, np.arange(n_total)):
+        offs = offs[order]
+        coords = {k: v[order] for k, v in coords.items()}
     starts, lengths = coalesce_runs(offs)
     return ExtractionPlan(offsets=offs, run_starts=starts,
                           run_lengths=lengths, coords=coords,

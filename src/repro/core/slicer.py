@@ -90,9 +90,14 @@ class _Item:
 class Slicer:
     """Algorithm 1 executor over any :class:`Datacube`."""
 
-    def __init__(self, datacube: Datacube, fast_paths: bool = True):
+    def __init__(self, datacube: Datacube, fast_paths: bool = True,
+                 verify: bool = False):
         self.datacube = datacube
         self.fast_paths = fast_paths
+        # verify=True runs the static plan checker
+        # (repro.analysis.plan_check) over every emitted plan and raises
+        # on any violated invariant — the runtime hook of DESIGN.md §6.
+        self.verify = verify
 
     def build_index_tree(self, request: Request) -> tuple[IndexNode, SliceStats]:
         t0 = time.perf_counter()
@@ -124,6 +129,12 @@ class Slicer:
         root, stats = self.build_index_tree(request)
         plan = flatten(root, self.datacube)
         stats.total_time_s = time.perf_counter() - t0
+        if self.verify:
+            # Lazy import: analysis is dependency-light but optional on
+            # the hot path; the checker is duck-typed so no cycle forms.
+            from repro.analysis.plan_check import verify_plan
+
+            verify_plan(plan, datacube=self.datacube, stats=stats)
         return plan, stats
 
     # -- categorical axes --------------------------------------------------

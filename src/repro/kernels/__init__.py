@@ -9,6 +9,12 @@
 #              Algorithm 1 per launch)
 # paged_attn — decode attention reading only planner-named KV pages
 # segment    — segment-sum as one-hot MXU matmul (GNN / bag aggregation)
+#
+# _casting.checked_cast_i32 is the ONLY place an offset-carrying array
+# may be cast to the kernels' int32 index dtype (enforced by the
+# unchecked-i32-cast lint rule in repro.analysis).
 from . import gather, paged_attn, segment, slice  # noqa: F401
+from ._casting import checked_cast_i32, ensure_i32_addressable
 
-__all__ = ["gather", "paged_attn", "segment", "slice"]
+__all__ = ["gather", "paged_attn", "segment", "slice",
+           "checked_cast_i32", "ensure_i32_addressable"]

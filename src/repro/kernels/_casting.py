@@ -1,0 +1,93 @@
+"""Bounds-checked int32 casts for offset-carrying arrays.
+
+Pallas TPU scalar-prefetch indices are int32, so every kernel entry
+point casts its offsets/indices down from the planner's int64.  On a
+>2³¹-element datacube that cast silently truncates — the exact
+byte-exactness bug the paper's contract forbids, and one no small-cube
+test ever catches.  This module is the single place the cast is allowed
+to happen (enforced by the ``unchecked-i32-cast`` lint rule in
+``repro.analysis``): validation runs host-side, before trace, and raises
+a clear error naming the cube size instead of reading the wrong bytes.
+
+Inside a ``jit`` trace the values are tracers and cannot be inspected;
+there the cast passes through unchecked, which is why callers with
+static shape knowledge (e.g. ``core/batched.py``) must additionally call
+:func:`ensure_i32_addressable` on the element count — that check runs at
+trace time against concrete Python ints.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+I32_LIMIT = 2 ** 31
+
+
+def ensure_i32_addressable(n_elements: int, what: str = "datacube") -> None:
+    """Raise unless every offset in ``[0, n_elements)`` fits in int32.
+
+    Call with static sizes before building kernels whose index maps are
+    int32 — runs at trace time, so it guards jitted code too.
+    """
+    if n_elements > I32_LIMIT:
+        raise OverflowError(
+            f"{what} has {n_elements} elements; offsets up to "
+            f"{n_elements - 1} do not fit in int32 (limit {I32_LIMIT - 1}). "
+            f"Shard the cube or keep offsets int64 host-side before "
+            f"kernels consume them.")
+
+
+def _is_tracer(x) -> bool:
+    try:
+        import jax
+
+        return isinstance(x, jax.core.Tracer)
+    except ImportError:
+        return False
+
+
+def checked_cast_i32(indices, *, what: str = "offsets",
+                     n_elements: int | None = None,
+                     allow_negative_one: bool = False):
+    """Cast ``indices`` to int32 after validating they fit.
+
+    ``n_elements``        — when given, offsets must be < n_elements
+                            (and the cube itself must be i32-addressable).
+    ``allow_negative_one`` — permit the kernels' ``-1`` padding slots
+                            (EmbeddingBag bags, batched plan lattices).
+
+    Concrete inputs (numpy or non-traced jax arrays) are validated
+    host-side; tracers pass through (see module docstring).
+    """
+    if n_elements is not None:
+        ensure_i32_addressable(n_elements, what=f"{what}: index space")
+    if _is_tracer(indices):
+        import jax.numpy as jnp
+
+        return indices.astype(jnp.int32)  # lint-ok: unchecked-i32-cast
+    arr = np.asarray(indices)
+    if arr.size:
+        hi = int(arr.max())
+        lo = int(arr.min())
+        if hi >= I32_LIMIT:
+            space = (f" (index space has {n_elements} elements)"
+                     if n_elements is not None else "")
+            raise OverflowError(
+                f"{what}: max offset {hi} does not fit in int32 "
+                f"(limit {I32_LIMIT - 1}){space} — the int32 cast before "
+                f"the gather kernel would silently read the wrong bytes.")
+        if n_elements is not None and hi >= n_elements:
+            raise IndexError(
+                f"{what}: offset {hi} out of bounds for an index space "
+                f"of {n_elements} elements.")
+        floor = -1 if allow_negative_one else 0
+        if lo < floor:
+            raise IndexError(
+                f"{what}: negative offset {lo} "
+                f"({'only -1 padding is' if allow_negative_one else 'none'}"
+                f" allowed).")
+    if isinstance(indices, np.ndarray):
+        return indices.astype(np.int32)  # lint-ok: unchecked-i32-cast
+    import jax.numpy as jnp
+
+    return indices.astype(jnp.int32)  # lint-ok: unchecked-i32-cast

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._casting import checked_cast_i32
+
 
 def _gather_kernel(idx_ref, table_ref, out_ref):
     # table_ref is the (1, D) row selected by the index map — the DMA
@@ -38,17 +40,25 @@ def _gather_kernel(idx_ref, table_ref, out_ref):
     out_ref[...] = table_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_rows(table: jax.Array, indices: jax.Array,
                 interpret: bool = True) -> jax.Array:
     """Gather ``table[indices]`` reading only the planned rows.
 
     table   — (N, D)
-    indices — (M,) int32, each in [0, N)
+    indices — (M,) integer, each in [0, N); validated host-side and cast
+    to the int32 the scalar-prefetch index map requires (offsets past
+    2³¹ raise instead of truncating).
     """
+    indices = checked_cast_i32(indices, what="gather_rows indices",
+                               n_elements=table.shape[0])
+    return _gather_rows(table, indices, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_rows(table: jax.Array, indices: jax.Array,
+                 interpret: bool = True) -> jax.Array:
     n, d = table.shape
     m = indices.shape[0]
-    indices = indices.astype(jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -81,16 +91,24 @@ def _bag_kernel(idx_ref, table_ref, out_ref):
     out_ref[...] += jnp.where(valid, row, jnp.zeros_like(row))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_rows_bag(table: jax.Array, bags: jax.Array,
                     interpret: bool = True) -> jax.Array:
     """Fused EmbeddingBag(sum): out[b] = Σ_l table[bags[b, l]].
 
-    table — (N, D);  bags — (B, L) int32, padded with -1.
+    table — (N, D);  bags — (B, L) integer, padded with -1 (the only
+    negative value allowed; validated host-side before the int32 cast).
     """
+    bags32 = checked_cast_i32(bags, what="gather_rows_bag bags",
+                              n_elements=table.shape[0],
+                              allow_negative_one=True)
+    return _gather_rows_bag(table, bags32, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_rows_bag(table: jax.Array, bags32: jax.Array,
+                     interpret: bool = True) -> jax.Array:
     n, d = table.shape
-    b, l = bags.shape
-    bags32 = bags.astype(jnp.int32)
+    b, l = bags32.shape
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

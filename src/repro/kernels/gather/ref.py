@@ -5,13 +5,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._casting import checked_cast_i32
+
 
 def gather_rows(table: jax.Array, indices: jax.Array) -> jax.Array:
-    return jnp.take(table, indices.astype(jnp.int32), axis=0)
+    idx = checked_cast_i32(indices, what="gather_rows indices",
+                           n_elements=table.shape[0])
+    return jnp.take(table, idx, axis=0)
 
 
 def gather_rows_bag(table: jax.Array, bags: jax.Array) -> jax.Array:
     """EmbeddingBag(sum) with -1 padding."""
+    bags = checked_cast_i32(bags, what="gather_rows_bag bags",
+                            n_elements=table.shape[0],
+                            allow_negative_one=True)
     valid = (bags >= 0)[..., None]
-    rows = jnp.take(table, jnp.maximum(bags, 0).astype(jnp.int32), axis=0)
+    rows = jnp.take(table, jnp.maximum(bags, 0), axis=0)
     return jnp.sum(jnp.where(valid, rows, 0), axis=1).astype(table.dtype)

@@ -129,9 +129,16 @@ class ExtractionService:
 
     def __init__(self, datacube: Datacube, capacity: int = 1024,
                  use_kernel: bool = False, tol: float = CANON_TOL,
-                 periods: dict[str, float] | None = None):
+                 periods: dict[str, float] | None = None,
+                 verify: bool = False):
         self.datacube = datacube
-        self.extractor = PolytopeExtractor(datacube, use_kernel=use_kernel)
+        # verify=True machine-checks every cold plan AND every shared
+        # union plan against the invariants in repro.analysis.plan_check
+        # (DESIGN.md §6) — the serving-layer switch for the paper's
+        # byte-exactness contract.
+        self.verify = verify
+        self.extractor = PolytopeExtractor(datacube, use_kernel=use_kernel,
+                                           verify=verify)
         self.cache = PlanCache(capacity)
         self.tol = tol
         # Cyclic-axis periods fold into the cache key: seam-straddling
@@ -143,7 +150,8 @@ class ExtractionService:
 
     @property
     def stats(self) -> CacheStats:
-        return self.cache.stats
+        with self._lock:
+            return self.cache.stats
 
     # -- single request ----------------------------------------------------
     def plan(self, request: Request) -> tuple[ExtractionPlan, bool, str]:
@@ -206,7 +214,11 @@ class ExtractionService:
 
         # Gather outside the lock: plans are immutable and the results
         # are local, so concurrent callers only contend on the (short)
-        # planning section, not on the batch I/O.
+        # planning section, not on the batch I/O.  This discipline is no
+        # longer just prose: repro.analysis.concurrency statically
+        # verifies that all _lock-protected state (the cache) is only
+        # touched inside `with self._lock` blocks — _gather_batch's
+        # stats updates re-enter the lock below.
         if flat_data is not None:
             self._gather_batch(results, batch_plans, flat_data)
         return results
@@ -228,6 +240,10 @@ class ExtractionService:
         union_plan = ExtractionPlan(
             offsets=union, run_starts=starts, run_lengths=lengths,
             coords={}, itemsize=self.datacube.dtype.itemsize)
+        if self.verify:
+            from repro.analysis.plan_check import verify_plan
+
+            verify_plan(union_plan, datacube=self.datacube)
         buf = gather(flat_data, union_plan,
                      use_kernel=self.extractor.use_kernel)
         per_key: dict[str, Any] = {}
