@@ -2,10 +2,12 @@
 
 ``BENCH_*.json`` files carry the perf trajectory PR-over-PR; a file that
 stops parsing or silently drops a column rots the trajectory without
-failing anything.  This tiny checker pins the contract for
-``BENCH_extraction.json``: valid JSON, a ``bench`` tag, a non-empty
-``rows`` list, and every row carrying the expected keys with numeric
-byte/point columns.
+failing anything.  This tiny checker pins the contract per bench family
+(dispatched on the payload's ``bench`` tag): valid JSON, a ``bench``
+tag, a non-empty ``rows`` list, and every row carrying the expected
+keys with numeric columns — byte/point reductions for
+``BENCH_extraction.json``, latency/hit-rate/coalescing for
+``BENCH_serve.json``.
 """
 
 from __future__ import annotations
@@ -28,11 +30,31 @@ EXTRACTION_ROW_SCHEMA: dict[str, type | None] = {
     "plan_time_s": numbers.Number,
 }
 
+# Zipfian closed-loop load against the sharded service (launch/serve.py
+# --mode extract): tail latency, cache efficacy, and cross-caller
+# admission coalescing are the trajectory columns.
+SERVE_ROW_SCHEMA: dict[str, type | None] = {
+    "scenario": str,
+    "requests": numbers.Number,
+    "threads": numbers.Number,
+    "shards": numbers.Number,
+    "window_ms": numbers.Number,
+    "p50_ms": numbers.Number,
+    "p99_ms": numbers.Number,
+    "req_per_s": numbers.Number,
+    "hit_rate": numbers.Number,
+    "coalescing_factor": numbers.Number,
+}
+
+ROW_SCHEMAS: dict[str, dict[str, type | None]] = {
+    "extraction": EXTRACTION_ROW_SCHEMA,
+    "serve": SERVE_ROW_SCHEMA,
+}
+
 
 def check_bench_file(path: str | Path,
                      row_schema: dict | None = None) -> list[Diagnostic]:
     path = Path(path)
-    schema = row_schema if row_schema is not None else EXTRACTION_ROW_SCHEMA
     rel = path.name
     if not path.exists():
         return [Diagnostic("bench-schema", "file does not exist",
@@ -48,6 +70,16 @@ def check_bench_file(path: str | Path,
             "bench-schema", "top level must be an object with a 'bench' "
             "tag", file=rel))
         return diags
+    schema = row_schema
+    if schema is None:
+        tag = payload["bench"]
+        schema = ROW_SCHEMAS.get(tag) if isinstance(tag, str) else None
+        if schema is None:
+            diags.append(Diagnostic(
+                "bench-schema",
+                f"unknown bench tag {tag!r} (registered: "
+                f"{sorted(ROW_SCHEMAS)})", file=rel))
+            return diags
     rows = payload.get("rows")
     if not isinstance(rows, list) or not rows:
         diags.append(Diagnostic(
@@ -58,12 +90,13 @@ def check_bench_file(path: str | Path,
             diags.append(Diagnostic(
                 "bench-schema", f"rows[{i}] is not an object", file=rel))
             continue
+        label = row.get("example") or row.get("scenario", "?")
         for key, typ in schema.items():
             if key not in row:
                 diags.append(Diagnostic(
                     "bench-schema",
-                    f"rows[{i}] ({row.get('example', '?')}) is missing "
-                    f"key {key!r}", file=rel))
+                    f"rows[{i}] ({label}) is missing key {key!r}",
+                    file=rel))
             elif typ is not None and not isinstance(row[key], typ):
                 diags.append(Diagnostic(
                     "bench-schema",

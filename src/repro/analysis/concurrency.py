@@ -8,7 +8,8 @@ that grows locks as the async-admission work lands).  Per class it
    manager where ``X`` ends in ``lock``;
 2. infers the *protected set*: the first attribute after ``self`` in
    every assignment target written inside a ``with self._lock:`` body
-   (``self.cache.stats.hits += 1`` protects ``cache``);
+   (``self.cache.stats.hits += 1`` protects ``cache``; subscript stores
+   count too — ``self._od[key] = plan`` protects ``_od``);
 3. flags any access — read or write — to a protected attribute outside
    a lock body.
 
@@ -84,6 +85,12 @@ class _ProtectedCollector(ast.NodeVisitor):
             self.generic_visit(node)
 
     def _record_target(self, tgt: ast.AST) -> None:
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            for elt in tgt.elts:
+                self._record_target(elt)
+            return
+        while isinstance(tgt, (ast.Subscript, ast.Starred)):
+            tgt = tgt.value
         root = _self_root(tgt)
         if root is not None:
             self.protected.add(root)

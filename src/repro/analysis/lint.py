@@ -13,9 +13,10 @@ Three rules, each encoding a contract the design doc states in prose:
   boolean-mask subscripts — ``x[x > t]`` directly, or ``x[mask]`` where
   ``mask`` was assigned from a comparison in the same function.
 * ``unchecked-i32-cast`` — in the plan/offset-consuming layers
-  (``core/``, ``serve/``, ``kernels/gather/``) every ``.astype(int32)``
-  must go through ``repro.kernels.checked_cast_i32``, which validates
-  host-side that offsets fit in int32 before any kernel truncates them.
+  (``core/``, ``serve/``, ``kernels/gather/``, ``kernels/paged_attn/``,
+  ``kernels/segment/``) every ``.astype(int32)`` must go through
+  ``repro.kernels.checked_cast_i32``, which validates host-side that
+  offsets fit in int32 before any kernel truncates them.
 
 Suppression: a line carrying ``# lint-ok: <rule>`` (or a bare
 ``# lint-ok``) is exempt — the pragma is greppable, the prose comment it
@@ -39,7 +40,8 @@ PLANNER_FLOAT64_FILES = (
 
 # Path prefixes (relative to src/repro) per rule.
 LOAD_THEN_FILTER_PATHS = ("dataplane/",)
-I32_CAST_PATHS = ("core/", "serve/", "kernels/gather/")
+I32_CAST_PATHS = ("core/", "serve/", "kernels/gather/",
+                  "kernels/paged_attn/", "kernels/segment/")
 # The one module allowed to spell the cast: the bounds-checked helper.
 I32_CAST_ALLOWLIST = ("kernels/_casting.py",)
 

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._casting import checked_cast_i32
+
 NEG_INF = -1e30
 
 
@@ -64,9 +66,33 @@ def _paged_attn_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, out_ref,
         out_ref[0, 0] = (acc_ref[...] / denom).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens,
                            interpret: bool = True):
+    """Validate the plan indices host-side, then run the jitted kernel.
+
+    ``block_table`` entries are page ids in [0, n_pages) with ``-1``
+    marking unused slots; ``seq_lens`` live KV lengths in
+    [0, PMAX·PS].  Both are scalar-prefetch inputs the kernel consumes
+    as int32, so the cast goes through the bounds-checked helper
+    (offsets past 2³¹ raise instead of truncating); tracers pass
+    through.
+    """
+    n_pages, _, ps, _ = k_pages.shape
+    pmax = block_table.shape[1]
+    table32 = checked_cast_i32(block_table,
+                               what="paged_decode_attention block_table",
+                               n_elements=n_pages,
+                               allow_negative_one=True)
+    lens32 = checked_cast_i32(seq_lens,
+                              what="paged_decode_attention seq_lens",
+                              n_elements=pmax * ps + 1)
+    return _paged_decode_attention(q, k_pages, v_pages, table32, lens32,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens,
+                            interpret: bool = True):
     b, h, dh = q.shape
     n_pages, kvh, ps, _ = k_pages.shape
     pmax = block_table.shape[1]
@@ -100,6 +126,5 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
         interpret=interpret,
         name="paged_decode_attention",
-    )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
-      q4, k_pages, v_pages)
+    )(block_table, seq_lens, q4, k_pages, v_pages)
     return out.reshape(b, h, dh)

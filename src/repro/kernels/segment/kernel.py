@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._casting import checked_cast_i32
+
 BLOCK_E = 256
 
 
@@ -41,13 +43,26 @@ def _segment_sum_kernel(seg_ref, msg_ref, out_ref, *, num_segments: int,
     out_ref[...] += (onehot @ msg).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
 def segment_sum(messages: jax.Array, segment_ids: jax.Array,
                 num_segments: int, interpret: bool = True) -> jax.Array:
+    """Validate segment ids host-side (each in [0, num_segments), ``-1``
+    padding allowed), cast through the bounds-checked helper, then run
+    the jitted one-hot MXU kernel; tracers pass through."""
+    seg32 = checked_cast_i32(segment_ids, what="segment_sum segment_ids",
+                             n_elements=num_segments,
+                             allow_negative_one=True)
+    return _segment_sum(messages, seg32, num_segments,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def _segment_sum(messages: jax.Array, segment_ids: jax.Array,
+                 num_segments: int, interpret: bool = True) -> jax.Array:
     e, d = messages.shape
     pad = (-e) % BLOCK_E
     if pad:
         messages = jnp.pad(messages, ((0, pad), (0, 0)))
+        # -1 padding stays int32 — masked out inside the kernel
         segment_ids = jnp.pad(segment_ids, (0, pad), constant_values=-1)
     ee = messages.shape[0]
     n_blocks = ee // BLOCK_E
@@ -64,4 +79,4 @@ def segment_sum(messages: jax.Array, segment_ids: jax.Array,
         out_shape=jax.ShapeDtypeStruct((num_segments, d), messages.dtype),
         interpret=interpret,
         name="segment_sum_onehot_mxu",
-    )(segment_ids.astype(jnp.int32), messages)
+    )(segment_ids, messages)

@@ -51,12 +51,21 @@ def run_lm(args) -> None:
 
 
 def run_extract(args) -> None:
+    """Closed-loop Zipfian load against the sharded service: ``--threads``
+    clients submit through one :class:`AdmissionQueue` (so duplicate hot
+    crops coalesce across callers inside each arrival window), and the
+    per-request latency distribution lands in ``BENCH_serve.json``."""
+    import json
+    import threading
+
     from repro.dataplane.weather import WeatherCube, request_population
-    from repro.serve.extraction import ExtractionService
+    from repro.serve.sharded import AdmissionQueue, ShardedExtractionService
 
     wc = WeatherCube(n=args.grid_n, n_times=4, n_levels=4)
     data = wc.field_data()
-    svc = ExtractionService(wc.cube, capacity=args.cache_capacity)
+    svc = ShardedExtractionService(
+        wc.cube, shards=args.shards,
+        capacity_per_shard=args.cache_capacity)
     population = request_population(wc)
 
     if args.zipf_s <= 1.0:
@@ -64,22 +73,63 @@ def run_extract(args) -> None:
     rng = np.random.default_rng(args.seed)
     ranks = np.minimum(rng.zipf(args.zipf_s, size=args.requests) - 1,
                        len(population) - 1)
-    t0 = time.perf_counter()
-    n_points = 0
-    for i in range(0, len(ranks), args.batch):
-        batch = [population[r] for r in ranks[i:i + args.batch]]
-        results = svc.submit_batch(batch, data)
-        n_points += sum(r.plan.n_points for r in results)
-    dt = time.perf_counter() - t0
+    per_thread = np.array_split(ranks, max(args.threads, 1))
+    latencies = [np.empty(0)] * len(per_thread)
+    barrier = threading.Barrier(len(per_thread) + 1)
 
+    def client(tid: int, my_ranks: np.ndarray, queue: AdmissionQueue):
+        lat = np.empty(len(my_ranks))
+        barrier.wait()
+        for i, r in enumerate(my_ranks):
+            t0 = time.perf_counter()
+            queue.extract(population[int(r)], timeout=60)
+            lat[i] = time.perf_counter() - t0
+        latencies[tid] = lat
+
+    with AdmissionQueue(svc, flat_data=data,
+                        window_s=args.window_ms / 1e3) as queue:
+        threads = [threading.Thread(target=client, args=(i, tr, queue))
+                   for i, tr in enumerate(per_thread)]
+        for t in threads:
+            t.start()
+        barrier.wait()
+        t0 = time.perf_counter()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        adm = queue.snapshot()
+
+    lat_ms = np.concatenate(latencies) * 1e3
+    if not len(lat_ms):  # --requests 0: an empty but schema-valid row
+        lat_ms = np.zeros(1)
     s = svc.stats
-    print(f"served {len(ranks)} requests / {n_points} points "
-          f"in {dt:.2f}s ({len(ranks) / dt:.0f} req/s)")
+    row = {
+        "scenario": f"zipf{args.zipf_s}-grid{args.grid_n}",
+        "requests": int(len(ranks)),
+        "threads": int(len(per_thread)),
+        "shards": int(args.shards),
+        "window_ms": float(args.window_ms),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "req_per_s": float(len(ranks) / dt) if dt else 0.0,
+        "hit_rate": float(s.hit_rate),
+        "coalescing_factor": float(adm.coalescing_factor),
+    }
+    with open(args.bench_out, "w") as fh:
+        json.dump({"bench": "serve", "rows": [row]}, fh, indent=1)
+
+    print(f"served {len(ranks)} requests from {len(per_thread)} threads "
+          f"in {dt:.2f}s ({row['req_per_s']:.0f} req/s)")
+    print(f"latency p50 {row['p50_ms']:.2f}ms / p99 {row['p99_ms']:.2f}ms")
     print(f"plan cache: {s.hits} hits / {s.misses} misses "
           f"(+{s.batch_dedup} batch-dedup) = {s.hit_rate:.0%} hit rate, "
-          f"{s.evictions} evictions")
+          f"{s.evictions} evictions across {args.shards} shards")
+    print(f"admission: {adm.windows} windows (max {adm.window_max}), "
+          f"{adm.coalesced} coalesced, "
+          f"factor {adm.coalescing_factor:.2f}x")
     print(f"planning {s.plan_time_s:.2f}s, shared gather "
           f"{s.gather_time_s:.2f}s, read sharing {s.sharing_factor:.2f}x")
+    print(f"wrote {args.bench_out}")
 
 
 def main() -> None:
@@ -91,10 +141,13 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=16)
     # extract mode
     ap.add_argument("--grid-n", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--window-ms", type=float, default=2.0)
     ap.add_argument("--cache-capacity", type=int, default=256)
     ap.add_argument("--zipf-s", type=float, default=1.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bench-out", default="BENCH_serve.json")
     args = ap.parse_args()
 
     if args.mode == "extract":

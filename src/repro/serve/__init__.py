@@ -7,7 +7,8 @@ import importlib
 from .extraction import (CacheStats, ExtractionService,  # noqa: F401
                          PlanCache, ServiceResult)
 
-_LAZY = ("engine", "kv_cache")
+# sharded pulls distributed.sharding (jax) — lazy keeps the light half light
+_LAZY = ("engine", "kv_cache", "sharded")
 
 
 def __getattr__(name: str):

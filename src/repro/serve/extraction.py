@@ -26,8 +26,8 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Any, Sequence
+from dataclasses import dataclass, fields, replace
+from typing import Any, Iterable, Sequence
 
 import numpy as np
 
@@ -50,6 +50,8 @@ class CacheStats:
     gather_time_s: float = 0.0      # cumulative shared-gather walltime
     bytes_requested: int = 0        # sum over served requests
     bytes_read: int = 0             # union reads actually issued
+    plans_shipped: int = 0          # cold plans shipped to peer replicas
+    plans_received: int = 0         # peer plans installed locally
 
     @property
     def lookups(self) -> int:
@@ -67,8 +69,25 @@ class CacheStats:
             else 1.0
 
 
+def merge_stats(parts: Iterable[CacheStats]) -> CacheStats:
+    """Field-wise sum of :class:`CacheStats` (derived rates recompute
+    from the summed counters) — shard aggregation for the sharded cache."""
+    out = CacheStats()
+    for s in parts:
+        for f in fields(CacheStats):
+            setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+    return out
+
+
 class PlanCache:
-    """Bounded LRU of ``canonical_hash → ExtractionPlan``."""
+    """Bounded LRU of ``canonical_hash → ExtractionPlan``.
+
+    Thread-safe: an internal lock serializes every OrderedDict access.
+    ``keys()``/``__contains__`` racing a concurrent ``put`` eviction
+    would otherwise iterate the dict mid-mutation — the unsynchronized
+    read the lock-discipline fixture in ``tests/test_analysis.py`` pins
+    as a regression.
+    """
 
     def __init__(self, capacity: int = 1024):
         if capacity < 1:
@@ -76,33 +95,56 @@ class PlanCache:
         self.capacity = capacity
         self._od: OrderedDict[str, ExtractionPlan] = OrderedDict()
         self.stats = CacheStats()
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
-        return len(self._od)
+        with self._lock:
+            return len(self._od)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._od
+        with self._lock:
+            return key in self._od
 
     def get(self, key: str) -> ExtractionPlan | None:
-        plan = self._od.get(key)
-        if plan is None:
-            self.stats.misses += 1
-            return None
-        self._od.move_to_end(key)
-        self.stats.hits += 1
-        return plan
+        with self._lock:
+            plan = self._od.get(key)
+            if plan is None:
+                self.stats.misses += 1
+                return None
+            self._od.move_to_end(key)
+            self.stats.hits += 1
+            return plan
 
     def put(self, key: str, plan: ExtractionPlan) -> None:
-        if key in self._od:
-            self._od.move_to_end(key)
-        self._od[key] = plan
-        while len(self._od) > self.capacity:
-            self._od.popitem(last=False)
-            self.stats.evictions += 1
+        with self._lock:
+            if key in self._od:
+                self._od.move_to_end(key)
+            self._od[key] = plan
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+                self.stats.evictions += 1
+
+    def pop(self, key: str) -> ExtractionPlan | None:
+        """Remove and return ``key``'s plan (shard-rebalance migration)."""
+        with self._lock:
+            return self._od.pop(key, None)
 
     def keys(self) -> list[str]:
         """LRU → MRU order (eviction order is the front)."""
-        return list(self._od)
+        with self._lock:
+            return list(self._od)
+
+    def record(self, **deltas: float) -> None:
+        """Atomically bump :class:`CacheStats` counters by name
+        (``record(plan_time_s=dt, batch_dedup=1)``)."""
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self.stats, name, getattr(self.stats, name) + d)
+
+    def snapshot(self) -> CacheStats:
+        """Consistent copy of the counters (safe to aggregate lock-free)."""
+        with self._lock:
+            return replace(self.stats)
 
 
 @dataclass
@@ -228,35 +270,57 @@ class ExtractionService:
                       flat_data: Any) -> None:
         """One union read for the whole batch, then slice each request's
         values out of the shared buffer (coalesced-run sharing)."""
-        nonempty = {k: p for k, p in batch_plans.items() if p.n_points}
-        if not nonempty:
-            for res in results:
-                res.values = np.empty(0, self.datacube.dtype)
-            return
-        t0 = time.perf_counter()
-        union = np.unique(np.concatenate(
-            [p.offsets for p in nonempty.values()]))
-        starts, lengths = coalesce_runs(union)
-        union_plan = ExtractionPlan(
-            offsets=union, run_starts=starts, run_lengths=lengths,
-            coords={}, itemsize=self.datacube.dtype.itemsize)
-        if self.verify:
-            from repro.analysis.plan_check import verify_plan
-
-            verify_plan(union_plan, datacube=self.datacube)
-        buf = gather(flat_data, union_plan,
-                     use_kernel=self.extractor.use_kernel)
-        per_key: dict[str, Any] = {}
-        for key, plan in nonempty.items():
-            idx = np.searchsorted(union, plan.offsets)
-            per_key[key] = buf[idx]
-        for res in results:
-            if res.plan.n_points:
-                res.values = per_key[res.key]
-            else:
-                res.values = np.empty(0, self.datacube.dtype)
+        requested, read, dt = shared_union_gather(
+            self.datacube, results, batch_plans, flat_data,
+            use_kernel=self.extractor.use_kernel, verify=self.verify)
         with self._lock:
-            for res in results:
-                self.cache.stats.bytes_requested += res.plan.nbytes
-            self.cache.stats.bytes_read += union_plan.nbytes
-            self.cache.stats.gather_time_s += time.perf_counter() - t0
+            self.cache.stats.bytes_requested += requested
+            self.cache.stats.bytes_read += read
+            self.cache.stats.gather_time_s += dt
+
+
+def shared_union_gather(datacube: Datacube,
+                        results: list[ServiceResult],
+                        batch_plans: dict[str, ExtractionPlan],
+                        flat_data: Any,
+                        use_kernel: bool = False,
+                        verify: bool = False) -> tuple[int, int, float]:
+    """Execute one coalesced union read for ``batch_plans`` and slice each
+    result's values out of the shared buffer.
+
+    Fills ``res.values`` in place and returns
+    ``(bytes_requested, bytes_read, gather_time_s)`` so the caller can
+    fold the accounting into its own stats under its own lock.  Shared
+    between :class:`ExtractionService` and the sharded service in
+    :mod:`repro.serve.sharded` — both funnel a window's distinct plans
+    through exactly one gather.
+    """
+    nonempty = {k: p for k, p in batch_plans.items() if p.n_points}
+    if not nonempty:
+        for res in results:
+            res.values = np.empty(0, datacube.dtype)
+        return 0, 0, 0.0
+    t0 = time.perf_counter()
+    union = np.unique(np.concatenate(
+        [p.offsets for p in nonempty.values()]))
+    starts, lengths = coalesce_runs(union)
+    union_plan = ExtractionPlan(
+        offsets=union, run_starts=starts, run_lengths=lengths,
+        coords={}, itemsize=datacube.dtype.itemsize)
+    if verify:
+        from repro.analysis.plan_check import verify_plan
+
+        verify_plan(union_plan, datacube=datacube)
+    buf = gather(flat_data, union_plan, use_kernel=use_kernel)
+    per_key: dict[str, Any] = {}
+    for key, plan in nonempty.items():
+        idx = np.searchsorted(union, plan.offsets)
+        per_key[key] = buf[idx]
+    requested = 0
+    for res in results:
+        if res.plan.n_points:
+            res.values = per_key[res.key]
+        else:
+            res.values = np.empty(0, datacube.dtype)
+        requested += res.plan.nbytes
+    return requested, union_plan.nbytes, time.perf_counter() - t0

@@ -255,6 +255,42 @@ class TestLintFixtures:
         diags = lint_source(bad, "serve/foo.py")
         assert [d.rule for d in diags] == ["unchecked-i32-cast"]
 
+    def test_raw_cast_in_paged_attn_fires_once(self):
+        bad = ("import jax.numpy as jnp\n"
+               "def f(block_table):\n"
+               "    return block_table.astype(jnp.int32)\n")
+        diags = lint_source(bad, "kernels/paged_attn/kernel.py")
+        assert [d.rule for d in diags] == ["unchecked-i32-cast"]
+
+    def test_checked_cast_in_paged_attn_is_clean(self):
+        good = ("from repro.kernels._casting import checked_cast_i32\n"
+                "def f(block_table, n_pages):\n"
+                "    return checked_cast_i32(block_table,\n"
+                "                            n_elements=n_pages,\n"
+                "                            allow_negative_one=True)\n")
+        assert lint_source(good, "kernels/paged_attn/kernel.py") == []
+
+    def test_raw_cast_in_segment_fires_once(self):
+        bad = ("import numpy as np\n"
+               "def f(segment_ids):\n"
+               "    return np.int32(segment_ids)\n")
+        diags = lint_source(bad, "kernels/segment/kernel.py")
+        assert [d.rule for d in diags] == ["unchecked-i32-cast"]
+
+    def test_checked_cast_in_segment_is_clean(self):
+        good = ("from repro.kernels._casting import checked_cast_i32\n"
+                "def f(segment_ids, num_segments):\n"
+                "    return checked_cast_i32(segment_ids,\n"
+                "                            n_elements=num_segments,\n"
+                "                            allow_negative_one=True)\n")
+        assert lint_source(good, "kernels/segment/kernel.py") == []
+
+    def test_cast_in_uncovered_kernel_dir_is_allowed(self):
+        ok = ("import jax.numpy as jnp\n"
+              "def f(x):\n"
+              "    return x.astype(jnp.int32)\n")
+        assert lint_source(ok, "kernels/experimental/foo.py") == []
+
     def test_cast_in_helper_module_is_allowed(self):
         ok = ("import numpy as np\n"
               "def checked_cast_i32(x):\n"
@@ -364,6 +400,77 @@ class TestLockDiscipline:
         assert check_lock_source(src, "dataplane/foo.py") == []
 
 
+# The bug PR 5 fixed: PlanCache guarded its writes (put/get under the
+# service lock) but left keys()/__contains__ reading the OrderedDict
+# bare — an iterating reader races a concurrently mutating writer.
+# This fixture is the pre-fix shape; the checker must flag it so the
+# regression cannot quietly come back.
+PLAN_CACHE_RACE = """
+import threading
+from collections import OrderedDict
+
+class PlanCache:
+    def __init__(self, capacity=1024):
+        self._lock = threading.Lock()
+        self._od = OrderedDict()
+        self.capacity = capacity
+
+    def put(self, key, plan):
+        with self._lock:
+            self._od[key] = plan
+
+    def __contains__(self, key):
+        return key in self._od
+
+    def keys(self):
+        return list(self._od)
+"""
+
+PLAN_CACHE_FIXED = PLAN_CACHE_RACE.replace(
+    "    def __contains__(self, key):\n"
+    "        return key in self._od\n",
+    "    def __contains__(self, key):\n"
+    "        with self._lock:\n"
+    "            return key in self._od\n").replace(
+    "    def keys(self):\n"
+    "        return list(self._od)\n",
+    "    def keys(self):\n"
+    "        with self._lock:\n"
+    "            return list(self._od)\n")
+
+
+class TestPlanCacheLockRegression:
+    def test_unsynchronized_cache_reads_are_flagged(self):
+        diags = check_lock_source(PLAN_CACHE_RACE, "serve/extraction.py")
+        assert diags and all(d.rule == "lock-discipline" for d in diags)
+        # both bare readers fire: __contains__ and keys()
+        assert len(diags) == 2
+        assert all("PlanCache._od" in d.message for d in diags)
+
+    def test_guarded_cache_reads_are_clean(self):
+        assert check_lock_source(PLAN_CACHE_FIXED,
+                                 "serve/extraction.py") == []
+
+    def test_real_plan_cache_state_is_inferred(self):
+        # The shipped PlanCache must expose its state to the checker:
+        # _od and stats inferred protected, every access lock-guarded.
+        import ast
+
+        from repro.analysis.concurrency import _ProtectedCollector
+
+        src = (SRC / "serve" / "extraction.py").read_text()
+        for node in ast.walk(ast.parse(src)):
+            if isinstance(node, ast.ClassDef) and node.name == "PlanCache":
+                c = _ProtectedCollector()
+                for stmt in node.body:
+                    c.visit(stmt)
+                assert "_lock" in c.locks
+                assert "_od" in c.protected
+                assert "stats" in c.protected
+                return
+        pytest.fail("PlanCache not found")
+
+
 # ---------------------------------------------------------------------------
 # the real tree must be clean (the CI gate)
 # ---------------------------------------------------------------------------
@@ -418,6 +525,26 @@ class TestBenchSchema:
         p = tmp_path / "b.json"
         p.write_text(json.dumps({"bench": "extraction", "rows": []}))
         assert [d.rule for d in check_bench_file(p)] == ["bench-schema"]
+
+    def test_repo_serve_bench_file_is_clean(self):
+        assert [str(d) for d in
+                check_bench_file(REPO / "BENCH_serve.json")] == []
+
+    def test_serve_row_missing_key_is_caught(self, tmp_path):
+        p = tmp_path / "b.json"
+        p.write_text(json.dumps({"bench": "serve", "rows": [
+            {"scenario": "zipf", "p50_ms": 1.0}]}))
+        diags = check_bench_file(p)
+        assert diags and all(d.rule == "bench-schema" for d in diags)
+        assert any("p99_ms" in d.message for d in diags)
+
+    def test_unknown_bench_tag_is_caught(self, tmp_path):
+        p = tmp_path / "b.json"
+        p.write_text(json.dumps({"bench": "warp-drive", "rows": [
+            {"scenario": "x"}]}))
+        diags = check_bench_file(p)
+        assert [d.rule for d in diags] == ["bench-schema"]
+        assert "serve" in diags[0].message  # lists registered tags
 
 
 # ---------------------------------------------------------------------------

@@ -1,17 +1,29 @@
 """Multi-device SPMD behaviour (8 fake CPU devices via subprocess —
-jax pins the device count at first import, so these run out of process).
+jax pins the device count at first import, so these run out of process)
+— plus the consistent-hash ring that routes plan-cache keys to shards.
+
+The SPMD classes carry the ``slow`` marker individually (JAX-compile
+heavy; the fast lane runs ``-m 'not slow'``); the HashRing classes are
+pure-python and run everywhere.  The hypothesis classes deepen the ring
+properties when hypothesis is installed and skip cleanly otherwise.
 """
 
+import hashlib
 import json
 import os
 import subprocess
 import sys
 import textwrap
+from collections import Counter
 from pathlib import Path
 
 import pytest
 
-pytestmark = pytest.mark.slow  # JAX-compile heavy; fast lane runs -m 'not slow'
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
@@ -33,6 +45,7 @@ def run_spmd(body: str, n_dev: int = 8) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 class TestShardingRules:
     def test_lm_rules_specs(self):
         import jax
@@ -82,6 +95,7 @@ class TestShardingRules:
         assert out["c"] == P("data")          # 3 % 1 == 0 → kept
 
 
+@pytest.mark.slow
 class TestSPMDExecution:
     def test_sharded_train_step_matches_single_device(self):
         res = run_spmd("""
@@ -200,6 +214,7 @@ class TestSPMDExecution:
         assert res["ndev"] == 8
 
 
+@pytest.mark.slow
 class TestDryRunEntry:
     def test_dryrun_cheap_cell_subprocess(self, tmp_path):
         """E2E guard on the dry-run entrypoint: one cheap cell must
@@ -217,3 +232,135 @@ class TestDryRunEntry:
         assert cell["ok"]
         assert cell["n_devices"] == 256
         assert cell["cost"]["flops_per_device"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Consistent-hash routing (plan-cache sharding, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def _keys(n, seed):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return [hashlib.sha256(rng.bytes(16)).hexdigest() for _ in range(n)]
+
+
+class TestHashRing:
+    def test_route_is_deterministic_and_member(self):
+        from repro.distributed.sharding import HashRing
+
+        ring = HashRing(["a", "b", "c", "d"])
+        for k in _keys(100, 0):
+            owner = ring.route(k)
+            assert owner in ring.nodes
+            assert ring.route(k) == owner
+
+    def test_key_point_is_64bit_prefix(self):
+        from repro.distributed.sharding import (PREFIX_HEX, RING_SPACE,
+                                                key_point)
+
+        k = hashlib.sha256(b"polytope").hexdigest()
+        assert key_point(k) == int(k[:PREFIX_HEX], 16)
+        assert 0 <= key_point(k) < RING_SPACE
+
+    def test_balance_within_tolerance(self):
+        from repro.distributed.sharding import HashRing
+
+        ring = HashRing([f"s{i}" for i in range(4)], replicas=64)
+        counts = Counter(ring.route(k) for k in _keys(4000, 7))
+        for node in ring.nodes:
+            share = counts[node] / 4000
+            assert 0.10 <= share <= 0.45, f"{node}: {share:.3f}"
+
+    def test_add_node_minimal_directed_remap(self):
+        from repro.distributed.sharding import HashRing
+
+        keys = _keys(4000, 11)
+        ring = HashRing([f"s{i}" for i in range(4)], replicas=64)
+        before = {k: ring.route(k) for k in keys}
+        ring.add_node("s4")
+        moved = [k for k in keys if ring.route(k) != before[k]]
+        frac = len(moved) / len(keys)
+        assert 0.10 <= frac <= 0.35, f"remap fraction {frac:.3f}"
+        # keys only ever move TO the added node
+        assert all(ring.route(k) == "s4" for k in moved)
+
+    def test_remove_node_only_moves_orphans(self):
+        from repro.distributed.sharding import HashRing
+
+        keys = _keys(1000, 13)
+        ring = HashRing([f"s{i}" for i in range(5)], replicas=64)
+        before = {k: ring.route(k) for k in keys}
+        ring.remove_node("s2")
+        for k in keys:
+            if before[k] != "s2":
+                assert ring.route(k) == before[k]
+            else:
+                assert ring.route(k) != "s2"
+
+    def test_topology_errors(self):
+        from repro.distributed.sharding import HashRing
+
+        ring = HashRing(["a"])
+        with pytest.raises(ValueError):
+            ring.add_node("a")
+        with pytest.raises(KeyError):
+            ring.remove_node("zz")
+        with pytest.raises(ValueError):
+            HashRing(replicas=0)
+        empty = HashRing()
+        with pytest.raises(RuntimeError):
+            empty.route("ff" * 32)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestHashRingProperties:
+    """Property-style deepening of the consistent-hashing contract."""
+
+    if HAVE_HYPOTHESIS:
+        key_lists = st.lists(
+            st.binary(min_size=4, max_size=32), min_size=100,
+            max_size=300, unique=True).map(
+                lambda bs: [hashlib.sha256(b).hexdigest() for b in bs])
+
+        @given(n_nodes=st.integers(2, 8), keys=key_lists)
+        @settings(max_examples=25, deadline=None)
+        def test_balance(self, n_nodes, keys):
+            from repro.distributed.sharding import HashRing
+
+            ring = HashRing([f"s{i}" for i in range(n_nodes)],
+                            replicas=64)
+            counts = Counter(ring.route(k) for k in keys)
+            cap = min(1.0, 3.5 / n_nodes)
+            assert max(counts.values()) / len(keys) <= cap
+
+        @given(n_nodes=st.integers(2, 8), keys=key_lists)
+        @settings(max_examples=25, deadline=None)
+        def test_add_moves_keys_only_to_new_node(self, n_nodes, keys):
+            from repro.distributed.sharding import HashRing
+
+            ring = HashRing([f"s{i}" for i in range(n_nodes)],
+                            replicas=64)
+            before = {k: ring.route(k) for k in keys}
+            ring.add_node("added")
+            moved = [k for k in keys if ring.route(k) != before[k]]
+            assert all(ring.route(k) == "added" for k in moved)
+            # minimal remap: well under a full reshuffle
+            assert len(moved) / len(keys) <= min(1.0,
+                                                 4.0 / (n_nodes + 1))
+
+        @given(n_nodes=st.integers(3, 8), keys=key_lists,
+               victim=st.integers(0, 7))
+        @settings(max_examples=25, deadline=None)
+        def test_remove_never_touches_survivors_keys(self, n_nodes,
+                                                     keys, victim):
+            from repro.distributed.sharding import HashRing
+
+            node = f"s{victim % n_nodes}"
+            ring = HashRing([f"s{i}" for i in range(n_nodes)],
+                            replicas=64)
+            before = {k: ring.route(k) for k in keys}
+            ring.remove_node(node)
+            for k in keys:
+                if before[k] != node:
+                    assert ring.route(k) == before[k]
