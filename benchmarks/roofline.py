@@ -17,11 +17,19 @@ scanned-layer models are corrected with the unrolled micro-probes
 MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) gives the useful-compute
 ratio; the dominant term names the bottleneck each §Perf iteration
 attacks.
+
+The second half of this module is the **kernels roofline**: measured
+slice/plan/gather timings for the device-resident planning pipeline
+(``repro.core.DevicePlanner`` + ``repro.kernels.gather`` burst DMA)
+against the cold host planner, written to ``BENCH_kernels.json`` so the
+kernel-perf trajectory is tracked PR-over-PR.  Unlike the dry-run
+roofline above it needs no ``results/dryrun.json`` — it times live code.
 """
 
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
 
 # TPU v5e hardware constants (per chip)
@@ -186,5 +194,152 @@ def print_table(rows: list[dict]) -> None:
               f"{r['mem_temp_gib']:>9.1f}")
 
 
+# ---------------------------------------------------------------------------
+# kernels roofline: device planning + burst gather vs the host loop
+# ---------------------------------------------------------------------------
+
+def _best_us(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def kernels_scenarios(n_lat: int = 320, n_lon: int = 640,
+                      n_grid: int = 512) -> list[tuple]:
+    """(name, datacube, request) triples for the device-planning bench.
+
+    Country polygons on the irregular weather cube (merged datetime,
+    mapped Gaussian latitudes, cyclic longitude — uk straddles the seam)
+    plus a disk on a regular grid: all polygon requests, i.e. the host
+    planner's slow per-row slicing path, Table-1 shapes."""
+    import numpy as np
+
+    from repro.core import (Disk, OrderedAxis, Request, Select,
+                            TensorDatacube)
+    from repro.dataplane.weather import IrregularWeatherCube
+
+    iwc = IrregularWeatherCube(n_dates=2, times_per_day=4, n_levels=3,
+                               n_lat=n_lat, n_lon=n_lon)
+    scens = [(f"irregular_{c}", iwc.cube, iwc.country_request(c))
+             for c in ("germany", "france", "uk")]
+
+    cube = TensorDatacube([
+        OrderedAxis("t", np.arange(4.0)),
+        OrderedAxis("x", np.arange(float(n_grid))),
+        OrderedAxis("y", np.arange(float(n_grid))),
+    ], dtype=np.float32)
+    disk = Request([Select("t", [0.0]),
+                    Disk(("x", "y"), (n_grid / 2.0, n_grid / 2.0),
+                         n_grid * 0.4, segments=24)])
+    scens.append((f"grid_disk_{n_grid}", cube, disk))
+    return scens
+
+
+def kernels_table(n_lat: int = 320, n_lon: int = 640, n_grid: int = 512,
+                  repeats: int = 5) -> list[dict]:
+    """Measured slice/plan/gather roofline rows.
+
+    * ``host_plan_us``   — cold host planner: full Algorithm-1 BFS per
+      call (there is no plan cache at this layer).
+    * ``device_plan_us`` — warm fused pipeline (``DevicePlanner.plan``):
+      one device invocation + host plan post-processing; the jit compile
+      is excluded (warm-up call), the per-request work is not.
+    * ``gather_us`` / ``burst_gather_us`` — per-element ``jnp.take``
+      vs run-length-aware burst DMA over the same plan.
+    * ``gather_gbps`` / ``roofline_frac`` — burst-gather read bandwidth
+      and its fraction of the HBM roofline (``HBM_BW``).
+    * ``compress_ratio`` — int64 offsets vs the delta-encoded int32
+      :class:`repro.core.CompressedPlan` byte size.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DevicePlanner, Slicer, compress_plan
+    from repro.kernels.gather import ops as gops
+
+    rows = []
+    for name, cube, request in kernels_scenarios(n_lat, n_lon, n_grid):
+        host = Slicer(cube)
+        dp = DevicePlanner(cube)
+        out = dp.plan(request)          # warm-up (jit compile) + guard
+        if out is None:
+            raise RuntimeError(f"{name}: request fell off the device "
+                               "pipeline — bench scenarios must be "
+                               "device-plannable")
+        plan, _ = out
+        host_plan, _ = host.extract_plan(request)
+        if not np.array_equal(plan.offsets, host_plan.offsets):
+            raise RuntimeError(f"{name}: device plan diverged from host")
+
+        host_us = _best_us(lambda: host.extract_plan(request), repeats)
+        dev_us = _best_us(lambda: dp.plan(request), repeats)
+
+        flat = jnp.zeros(cube.n_elements, jnp.float32)
+        offs = jnp.asarray(plan.offsets)
+        take = lambda: jnp.take(flat, offs, axis=0).block_until_ready()
+        burst = lambda: gops.gather_plan_runs(
+            flat, plan.run_starts, plan.run_lengths).block_until_ready()
+        take()
+        burst()                         # warm both gather paths
+        gather_us = _best_us(take, repeats)
+        burst_us = _best_us(burst, repeats)
+
+        bytes_read = plan.n_points * flat.dtype.itemsize
+        gbps = bytes_read / (burst_us * 1e-6) / 1e9
+        cp = compress_plan(plan)
+        rows.append(dict(
+            scenario=name,
+            n_points=int(plan.n_points),
+            n_runs=int(len(plan.run_starts)),
+            host_plan_us=host_us,
+            device_plan_us=dev_us,
+            plan_speedup=host_us / dev_us,
+            gather_us=gather_us,
+            burst_gather_us=burst_us,
+            gather_gbps=gbps,
+            roofline_frac=gbps * 1e9 / HBM_BW,
+            compress_ratio=plan.offsets.nbytes / cp.nbytes_encoded,
+        ))
+    return rows
+
+
+def write_kernels_bench(rows: list[dict],
+                        out_path: str = "BENCH_kernels.json") -> None:
+    with open(out_path, "w") as fh:
+        json.dump({"bench": "kernels", "rows": rows}, fh, indent=2)
+
+
+def print_kernels_table(rows: list[dict]) -> None:
+    hdr = (f"{'scenario':<22}{'points':>8}{'runs':>6}"
+           f"{'host us':>10}{'dev us':>9}{'speedup':>8}"
+           f"{'burst us':>9}{'GB/s':>7}{'compress':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['scenario']:<22}{r['n_points']:>8}{r['n_runs']:>6}"
+              f"{r['host_plan_us']:>10.0f}{r['device_plan_us']:>9.0f}"
+              f"{r['plan_speedup']:>8.2f}{r['burst_gather_us']:>9.0f}"
+              f"{r['gather_gbps']:>7.2f}{r['compress_ratio']:>9.2f}")
+
+
 if __name__ == "__main__":
-    print_table(roofline_table())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--fast", action="store_true",
+                    help="small cubes (CI smoke)")
+    args = ap.parse_args()
+
+    if Path("results/dryrun.json").exists():
+        print_table(roofline_table())
+        print()
+    sizes = dict(n_lat=96, n_lon=192, n_grid=128) if args.fast else {}
+    rows = kernels_table(repeats=args.repeats, **sizes)
+    print_kernels_table(rows)
+    write_kernels_bench(rows, args.out)
+    print(f"wrote {args.out}")

@@ -64,13 +64,28 @@ def run_plancache() -> None:
         _emit(r["name"], r["us_per_call"], r["derived"])
 
 
-def run_roofline() -> None:
+def run_roofline(full: bool = False) -> None:
     import os
 
     from . import roofline
 
+    # The measured kernels roofline always runs (no dry-run artifacts
+    # needed): device planning vs the cold host loop + burst gather
+    # bandwidth, persisted to BENCH_kernels.json.
+    sizes = {} if full else dict(n_lat=96, n_lon=192, n_grid=128)
+    rows = roofline.kernels_table(repeats=3, **sizes)
+    for r in rows:
+        _emit(f"kernels_{r['scenario']}", r["device_plan_us"],
+              f"host_us={r['host_plan_us']:.0f};"
+              f"speedup={r['plan_speedup']:.2f}x;"
+              f"burst_us={r['burst_gather_us']:.0f};"
+              f"gbps={r['gather_gbps']:.2f};"
+              f"compress={r['compress_ratio']:.2f}")
+    roofline.write_kernels_bench(rows)
+
     if not os.path.exists("results/dryrun.json"):
-        print("roofline,skipped,no results/dryrun.json", file=sys.stderr)
+        print("roofline,dryrun-table-skipped,no results/dryrun.json",
+              file=sys.stderr)
         return
     for r in roofline.roofline_table():
         _emit(f"roofline_{r['arch']}_{r['shape']}",
@@ -87,7 +102,7 @@ TARGETS = {
     "table1": lambda full=False: run_table1(full),
     "kernels": run_kernels,
     "plancache": run_plancache,
-    "roofline": run_roofline,
+    "roofline": lambda full=False: run_roofline(full),
 }
 
 
@@ -100,8 +115,8 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     if args.only:
-        if args.only == "table1":
-            run_table1(args.full)
+        if args.only in ("table1", "roofline"):
+            TARGETS[args.only](args.full)
         else:
             TARGETS[args.only]()
         return
@@ -110,7 +125,7 @@ def main() -> None:
     run_table1(True)
     run_kernels()
     run_plancache()
-    run_roofline()
+    run_roofline(True)
 
 
 if __name__ == "__main__":

@@ -77,8 +77,8 @@ def main(argv: list[str] | None = None) -> int:
                     help="verify live planner output on small cubes")
     ap.add_argument("--bench", nargs="*", metavar="JSON",
                     help="bench files to schema-check (default: "
-                         "BENCH_extraction.json / BENCH_serve.json "
-                         "when present)")
+                         "BENCH_extraction.json / BENCH_serve.json / "
+                         "BENCH_kernels.json when present)")
     ap.add_argument("--plan", nargs="*", metavar="PKL", default=[],
                     help="pickled ExtractionPlan files to verify")
     ap.add_argument("--n-elements", type=int, default=None,
@@ -100,7 +100,8 @@ def main(argv: list[str] | None = None) -> int:
         diags += check_lock_discipline(src_root)
     bench_files = list(args.bench or [])
     if args.all and not bench_files:
-        for name in ("BENCH_extraction.json", "BENCH_serve.json"):
+        for name in ("BENCH_extraction.json", "BENCH_serve.json",
+                     "BENCH_kernels.json"):
             default_bench = Path.cwd() / name
             if default_bench.exists():
                 bench_files.append(default_bench)

@@ -46,9 +46,28 @@ SERVE_ROW_SCHEMA: dict[str, type | None] = {
     "coalescing_factor": numbers.Number,
 }
 
+# Device-planning / burst-gather microbench (benchmarks/roofline.py
+# kernels_table): cold host-planner latency vs the fused device
+# pipeline, plus gather bandwidth against the HBM roofline and the
+# compressed-plan encoding ratio.
+KERNELS_ROW_SCHEMA: dict[str, type | None] = {
+    "scenario": str,
+    "n_points": numbers.Number,
+    "n_runs": numbers.Number,
+    "host_plan_us": numbers.Number,
+    "device_plan_us": numbers.Number,
+    "plan_speedup": numbers.Number,
+    "gather_us": numbers.Number,
+    "burst_gather_us": numbers.Number,
+    "gather_gbps": numbers.Number,
+    "roofline_frac": numbers.Number,
+    "compress_ratio": numbers.Number,
+}
+
 ROW_SCHEMAS: dict[str, dict[str, type | None]] = {
     "extraction": EXTRACTION_ROW_SCHEMA,
     "serve": SERVE_ROW_SCHEMA,
+    "kernels": KERNELS_ROW_SCHEMA,
 }
 
 

@@ -12,9 +12,10 @@ Three rules, each encoding a contract the design doc states in prose:
   (DESIGN.md §2: "There is no 'load then filter' anywhere").  Fires on
   boolean-mask subscripts — ``x[x > t]`` directly, or ``x[mask]`` where
   ``mask`` was assigned from a comparison in the same function.
-* ``unchecked-i32-cast`` — in the plan/offset-consuming layers
+* ``unchecked-i32-cast`` — in the plan/offset-carrying layers
   (``core/``, ``serve/``, ``kernels/gather/``, ``kernels/paged_attn/``,
-  ``kernels/segment/``) every ``.astype(int32)`` must go through
+  ``kernels/segment/``, ``kernels/slice/``, ``kernels/plan/``) every
+  ``.astype(int32)`` must go through
   ``repro.kernels.checked_cast_i32``, which validates host-side that
   offsets fit in int32 before any kernel truncates them.
 
@@ -41,7 +42,8 @@ PLANNER_FLOAT64_FILES = (
 # Path prefixes (relative to src/repro) per rule.
 LOAD_THEN_FILTER_PATHS = ("dataplane/",)
 I32_CAST_PATHS = ("core/", "serve/", "kernels/gather/",
-                  "kernels/paged_attn/", "kernels/segment/")
+                  "kernels/paged_attn/", "kernels/segment/",
+                  "kernels/slice/", "kernels/plan/")
 # The one module allowed to spell the cast: the bounds-checked helper.
 I32_CAST_ALLOWLIST = ("kernels/_casting.py",)
 

@@ -62,19 +62,17 @@ def batched_plan_2d(verts: jax.Array, valid: jax.Array,
         (axis0[jnp.clip(row_ids, 0, n0 - 1)] <= hi0[:, None] + 1e-6)
     row_vals = axis0[jnp.clip(row_ids, 0, n0 - 1)]
 
-    # slice every (polytope, row) pair: flatten to a (P·R) batch
-    verts_f = jnp.broadcast_to(verts[:, None], (p, max_rows, v, 2)
-                               ).reshape(p * max_rows, v, 2)
-    valid_f = jnp.broadcast_to(valid[:, None], (p, max_rows, v)
-                               ).reshape(p * max_rows, v)
-    planes = row_vals.reshape(p * max_rows)
-    pts, mask = slice_ref.slice_batch(verts_f, valid_f, planes, k=0)
-    # remaining coordinate (axis 1) of each intersection point
-    y = jnp.where(mask, pts[:, :, 1], jnp.inf)
-    lo1 = jnp.min(y, axis=1)
-    y2 = jnp.where(mask, pts[:, :, 1], -jnp.inf)
-    hi1 = jnp.max(y2, axis=1)
-    hit = jnp.isfinite(lo1) & (row_ok.reshape(-1))
+    # slice every (polytope, row) pair via the shared slicing core —
+    # extents of the remaining coordinate only, so the (V × V) candidate
+    # lattice never materializes (same math as the old slice_batch +
+    # masked min/max, fused).
+    scale = jnp.maximum(1.0, jnp.max(jnp.abs(verts[:, :, 0]), axis=1))
+    lo1, hi1, hit2 = slice_ref.slice_minor_extents(
+        verts[:, None, :, 0], verts[:, None, :, 1], valid[:, None, :],
+        row_vals, (slice_ref.PLANE_TOL * scale)[:, None])
+    lo1 = lo1.reshape(p * max_rows)
+    hi1 = hi1.reshape(p * max_rows)
+    hit = hit2.reshape(p * max_rows) & row_ok.reshape(-1)
 
     c_start = jnp.searchsorted(axis1, lo1 - 1e-6, side="left")
     col_ids = c_start[:, None] + jnp.arange(max_cols)[None, :]
@@ -92,6 +90,37 @@ def batched_plan_2d(verts: jax.Array, valid: jax.Array,
     offsets = offsets.reshape(p, max_rows, max_cols)
     n_points = jnp.sum(offsets >= 0, axis=(1, 2))
     return offsets, n_points
+
+
+def batched_plan_runs_2d(verts: jax.Array, valid: jax.Array,
+                         axis0: jax.Array, axis1: jax.Array,
+                         max_rows: int, use_pallas: bool = False,
+                         interpret: bool = True):
+    """Run-pair form of :func:`batched_plan_2d`: the compressed plan
+    representation, straight from the fused pipeline.
+
+    Same geometry/tolerance conventions as the offset-lattice path (the
+    f32 ``1e-6`` regime), but emits compacted ``(run_start, run_length)``
+    pairs instead of the padded (P, R, C) lattice — rows become single
+    entries regardless of width, and the output feeds
+    ``kernels.gather.gather_plan_runs`` burst DMA directly.  Returns
+    (run_starts (M,) i32, run_lengths (M,) i32, meta (3,) i32 =
+    [n_runs, n_rows, n_points]) flat across the batch in
+    (polytope, row) order.
+    """
+    from repro.kernels.plan import ops as plan_ops
+
+    p = verts.shape[0]
+    n0, n1 = int(axis0.shape[0]), int(axis1.shape[0])
+    ensure_i32_addressable(n0 * n1, what="batched_plan_runs_2d grid")
+    # scalars layout: [eps0, eps1, plane_tol_rel, period]
+    scalars = jnp.asarray([1e-6, 1e-6, slice_ref.PLANE_TOL, 0.0],
+                          verts.dtype)
+    rowoff = jnp.arange(0, n0 * n1, n1, dtype=jnp.int32)
+    return plan_ops.plan_runs_2d(
+        verts, valid, jnp.zeros(p, jnp.int32), axis0, rowoff, axis1,
+        scalars, n0=n0, n1=n1, max_rows=max_rows, cyclic=False,
+        use_pallas=use_pallas, interpret=interpret)
 
 
 def batched_extract_2d(flat_data: jax.Array, verts, valid, axis0, axis1,

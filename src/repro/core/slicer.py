@@ -91,13 +91,28 @@ class Slicer:
     """Algorithm 1 executor over any :class:`Datacube`."""
 
     def __init__(self, datacube: Datacube, fast_paths: bool = True,
-                 verify: bool = False):
+                 verify: bool = False, device_planner: bool = False):
         self.datacube = datacube
         self.fast_paths = fast_paths
         # verify=True runs the static plan checker
         # (repro.analysis.plan_check) over every emitted plan and raises
         # on any violated invariant — the runtime hook of DESIGN.md §6.
         self.verify = verify
+        # device_planner=True routes eligible requests through the fused
+        # on-device pipeline (repro.core.device_planner), which emits
+        # byte-identical plans in one invocation instead of a host
+        # round-trip per BFS layer; ineligible requests fall back to the
+        # host path below transparently.  Same opt-out contract as
+        # fast_paths.  Pass a DevicePlanner instance to configure the
+        # backend (use_pallas / dtype / job cap).
+        self._device_planner = None
+        if device_planner:
+            if device_planner is True:
+                from .device_planner import DevicePlanner
+
+                self._device_planner = DevicePlanner(datacube)
+            else:
+                self._device_planner = device_planner
 
     def build_index_tree(self, request: Request) -> tuple[IndexNode, SliceStats]:
         t0 = time.perf_counter()
@@ -125,6 +140,16 @@ class Slicer:
         return root, stats
 
     def extract_plan(self, request: Request) -> tuple[ExtractionPlan, SliceStats]:
+        if self._device_planner is not None:
+            out = self._device_planner.plan(request)
+            if out is not None:
+                plan, stats = out
+                if self.verify:
+                    from repro.analysis.plan_check import verify_plan
+
+                    verify_plan(plan, datacube=self.datacube, stats=stats)
+                return plan, stats
+            # fall through: request/cube outside the pipeline's shape
         t0 = time.perf_counter()
         root, stats = self.build_index_tree(request)
         plan = flatten(root, self.datacube)

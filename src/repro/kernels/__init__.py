@@ -5,16 +5,20 @@
 #
 # gather     — exact-byte extraction gather + fused EmbeddingBag (the
 #              paper's I/O path on TPU: scalar-prefetch DMA of planned rows)
+#              + run-length burst gather over coalesced plan runs
 # slice      — batched polytope-hyperplane slicing (one BFS layer of
 #              Algorithm 1 per launch)
+# plan       — persistent device-resident BFS planning: the full
+#              Algorithm-1 trailing stage (slice → compact → run
+#              emission) in one pipeline invocation
 # paged_attn — decode attention reading only planner-named KV pages
 # segment    — segment-sum as one-hot MXU matmul (GNN / bag aggregation)
 #
 # _casting.checked_cast_i32 is the ONLY place an offset-carrying array
 # may be cast to the kernels' int32 index dtype (enforced by the
 # unchecked-i32-cast lint rule in repro.analysis).
-from . import gather, paged_attn, segment, slice  # noqa: F401
+from . import gather, paged_attn, plan, segment, slice  # noqa: F401
 from ._casting import checked_cast_i32, ensure_i32_addressable
 
-__all__ = ["gather", "paged_attn", "segment", "slice",
+__all__ = ["gather", "paged_attn", "plan", "segment", "slice",
            "checked_cast_i32", "ensure_i32_addressable"]

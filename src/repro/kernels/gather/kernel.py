@@ -127,3 +127,61 @@ def _gather_rows_bag(table: jax.Array, bags32: jax.Array,
         interpret=interpret,
         name="polytope_gather_bag",
     )(bags32, table)
+
+
+def _runs_kernel(starts_ref, flat_ref, out_ref, scratch_ref, sem, *,
+                 block: int):
+    # One grid step = one coalesced plan run chunk: a single wide DMA
+    # HBM→VMEM starting at the scalar-prefetched element offset.  This
+    # is the run-length-aware burst path — per-offset gathers become one
+    # `block`-wide copy per chunk.
+    i = pl.program_id(0)
+    start = starts_ref[i]
+    copy = pltpu.make_async_copy(flat_ref.at[pl.ds(start, block)],
+                                 scratch_ref, sem)
+    copy.start()
+    copy.wait()
+    out_ref[...] = scratch_ref[...][None, :]
+
+
+def gather_runs(flat: jax.Array, chunk_starts: jax.Array,
+                block: int, interpret: bool = True) -> jax.Array:
+    """Burst-gather ``block`` contiguous elements per chunk start.
+
+    flat         — (n + block,) payload, padded by ``block`` so the last
+                   chunk's wide copy stays in bounds
+    chunk_starts — (C,) element offsets; validated and cast by the
+                   caller (``ops.gather_plan_runs``)
+    Returns (C, block); callers compact the valid prefix of each chunk.
+    """
+    chunk_starts = checked_cast_i32(chunk_starts,
+                                    what="gather_runs chunk starts",
+                                    n_elements=flat.shape[0])
+    return _gather_runs(flat, chunk_starts, block=block,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _gather_runs(flat: jax.Array, chunk_starts: jax.Array, block: int,
+                 interpret: bool = True) -> jax.Array:
+    c = chunk_starts.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(c,),
+        in_specs=[
+            # whole payload stays in HBM/ANY; the kernel DMAs slices
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i, idx: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block,), flat.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_runs_kernel, block=block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, block), flat.dtype),
+        interpret=interpret,
+        name="polytope_gather_runs",
+    )(chunk_starts, flat)

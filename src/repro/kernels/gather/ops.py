@@ -11,8 +11,16 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels._casting import checked_cast_i32
 
 from . import kernel, ref
+
+# Burst chunk width in elements: one DMA per chunk; runs longer than
+# this split into several wide copies, shorter ones over-read into the
+# padded tail and compact afterwards.
+BURST_BLOCK = 128
 
 
 def gather_rows(table: jax.Array, indices: jax.Array,
@@ -29,6 +37,64 @@ def gather_rows_bag(table: jax.Array, bags: jax.Array,
     if use_pallas:
         return kernel.gather_rows_bag(table, bags, interpret=interpret)
     return ref.gather_rows_bag(table, bags)
+
+
+def chunk_runs(run_starts: np.ndarray, run_lengths: np.ndarray,
+               block: int = BURST_BLOCK
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Split coalesced plan runs into ≤``block``-element DMA chunks.
+
+    Pure numpy (host side — plan post-processing, not kernel work).
+    Returns (chunk_starts (C,) int64, gather_idx (N,) int64): chunk c
+    covers elements [chunk_starts[c], chunk_starts[c] + block) of the
+    padded payload, and ``gather_idx`` compacts the (C·block,) chunk
+    lattice back to the plan's N points in offset order.
+    """
+    starts = np.asarray(run_starts, np.int64)
+    lens = np.asarray(run_lengths, np.int64)
+    if starts.size == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    n_chunks = -(-lens // block)
+    tot = int(n_chunks.sum())
+    ends = np.cumsum(n_chunks)
+    ordinal = np.arange(tot) - np.repeat(ends - n_chunks, n_chunks)
+    chunk_starts = np.repeat(starts, n_chunks) + ordinal * block
+    chunk_lens = np.minimum(block, np.repeat(lens, n_chunks)
+                            - ordinal * block)
+    cends = np.cumsum(chunk_lens)
+    n = int(cends[-1])
+    ramp = np.arange(n) - np.repeat(cends - chunk_lens, chunk_lens)
+    gather_idx = np.repeat(np.arange(tot) * block, chunk_lens) + ramp
+    return chunk_starts, gather_idx
+
+
+def gather_plan_runs(flat: jax.Array, run_starts: np.ndarray,
+                     run_lengths: np.ndarray, block: int = BURST_BLOCK,
+                     use_pallas: bool = False,
+                     interpret: bool = True) -> jax.Array:
+    """Run-length-aware burst gather of an extraction plan.
+
+    Reads every planned element of the flat (n,) payload as wide
+    contiguous copies — one DMA per ≤``block``-element chunk of each
+    coalesced run — then compacts the chunk lattice back to the plan's
+    point order.  Byte-equal to ``flat[plan.offsets]``.
+    """
+    chunk_starts, gather_idx = chunk_runs(run_starts, run_lengths, block)
+    if chunk_starts.size == 0:
+        return jnp.zeros((0,), flat.dtype)
+    n_flat = flat.shape[0]
+    cs = checked_cast_i32(chunk_starts, what="burst gather chunk starts",
+                          n_elements=n_flat)
+    # pad so the final chunk's wide window stays in bounds
+    flat_pad = jnp.concatenate([flat, jnp.zeros((block,), flat.dtype)])
+    if use_pallas:
+        out = kernel.gather_runs(flat_pad, cs, block, interpret=interpret)
+    else:
+        out = ref.gather_runs(flat_pad, cs, block)
+    idx = checked_cast_i32(gather_idx,
+                           what="burst gather compaction indices",
+                           n_elements=out.size)
+    return jnp.take(out.reshape(-1), idx)
 
 
 def gather_plan_rows(flat: jax.Array, offsets: jax.Array, row: int,

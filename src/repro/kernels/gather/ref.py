@@ -22,3 +22,12 @@ def gather_rows_bag(table: jax.Array, bags: jax.Array) -> jax.Array:
     valid = (bags >= 0)[..., None]
     rows = jnp.take(table, jnp.maximum(bags, 0), axis=0)
     return jnp.sum(jnp.where(valid, rows, 0), axis=1).astype(table.dtype)
+
+
+def gather_runs(flat: jax.Array, chunk_starts: jax.Array,
+                block: int) -> jax.Array:
+    """Oracle for the burst kernel: strided window loads, (C, block)."""
+    starts = checked_cast_i32(chunk_starts, what="gather_runs chunk starts",
+                              n_elements=flat.shape[0])
+    window = starts[:, None] + jnp.arange(block, dtype=jnp.int32)[None, :]
+    return jnp.take(flat, window, axis=0)

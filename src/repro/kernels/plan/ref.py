@@ -1,0 +1,173 @@
+"""Pure-jnp oracle for the device-resident BFS planning pipeline.
+
+Fuses the full trailing-2-D stage of Algorithm 1 — the part that
+dominates cold-path planning — into ONE jitted computation, where the
+host planner round-trips through Python per BFS layer:
+
+  row discovery   per (job) polytope: extents on the major axis →
+                  index range (comparison-count ``searchsorted``,
+                  byte-identical to ``OrderedAxis.indices_in_range``);
+  slice           every (job, row) pair at once, reduced to the minor-
+                  coordinate extents (``kernels.slice
+                  .slice_minor_extents`` — the shared slicing core);
+  column ranges   minor-axis index ranges per row, with the cyclic
+                  seam split (≤ 2 storage segments per row, mirroring
+                  ``CyclicAxis.indices_in_range``);
+  run emission    vector leaves become ``(run_start, run_length)``
+                  pairs in storage offsets — the representation
+                  ``kernels/gather`` burst-DMAs — compacted by an
+                  exclusive prefix sum over the valid-run mask.
+
+A *job* is one (leading-axis path × polytope) pair; ``base`` carries
+the path's storage base offset, so the emitted runs are absolute.  The
+frontier (the (J, R) row lattice and its per-row column ranges) never
+materializes on the host: one invocation returns the compacted run
+buffer plus the §5.2 slice accounting.
+
+Numerics: every comparison/interpolation mirrors the host planner's
+formulas operation-for-operation (``OrderedAxis.indices_in_range`` eps
+widening, ``geometry.slice_vertices`` pairwise lerp), so under float64
+inputs the emitted byte set is bit-identical to the host plan; under
+float32 exactness holds whenever the geometry clears grid values by
+more than f32 roundoff (the ``core/batched.py`` regime).
+
+Layout: runs are compacted in flat slot order ``(job, row, segment)``
+with segment 0 = the in-window range and segment 1 = the wrapped
+(pre-seam) range, so the Pallas kernel's sequential-grid cursor and
+this oracle produce byte-identical buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._casting import ensure_i32_addressable
+from repro.kernels.slice.ref import slice_minor_extents
+
+# scalars[] layout shared with the Pallas kernel
+EPS0, EPS1, PLANE_TOL_REL, PERIOD = range(4)
+
+
+def _count_lt(values: jax.Array, x: jax.Array) -> jax.Array:
+    """# of ``values`` < x — ``searchsorted(side='left')`` as a
+    comparison count (identical result, kernel-friendly)."""
+    return jnp.sum(values < x[..., None], axis=-1, dtype=jnp.int32)
+
+
+def _count_le(values: jax.Array, x: jax.Array) -> jax.Array:
+    """# of ``values`` ≤ x — ``searchsorted(side='right')``."""
+    return jnp.sum(values <= x[..., None], axis=-1, dtype=jnp.int32)
+
+
+def row_slots_2d(verts, valid, base, sv0, rowoff0, sv1, scalars, *,
+                 n0: int, n1: int, max_rows: int, cyclic: bool):
+    """Uncompacted run slots for every (job, row): the device frontier.
+
+    verts   — (J, V, 2) padded vertices, (major, minor) coordinates
+    valid   — (J, V) vertex mask
+    base    — (J,) int32 storage base offset of the job's leading path
+    sv0     — (n0,) sorted major-axis values
+    rowoff0 — (n0,) int32 storage offset of each sorted major index
+              (precomputed host-side through the axis permutation and
+              any transform, so merged/mapped major axes need no
+              in-kernel address arithmetic)
+    sv1     — (n1,) sorted minor-axis values (identity storage order,
+              unit stride — the run-contiguity precondition)
+    scalars — (4,) float: [eps0, eps1, plane_tol_rel, period]
+
+    Returns (starts (J, R, 2) int32, lengths (J, R, 2) int32,
+    ok (J, R, 2) bool, n_rows (), n_points ()): segment 0 is the
+    in-window column range, segment 1 the wrapped pre-seam range
+    (cyclic only).  ``n_rows`` counts candidate rows (the §5.2 dim-2
+    slice count), ``n_points`` the emitted points pre-dedupe (dim-1).
+    """
+    ensure_i32_addressable(n0 * n1, what="plan_runs_2d trailing grid")
+    R = max_rows
+    fdt = verts.dtype
+    big = jnp.asarray(jnp.inf, fdt)
+    eps0 = scalars[EPS0]
+    eps1 = scalars[EPS1]
+    period = scalars[PERIOD]
+
+    x = verts[:, :, 0]                                   # (J, V)
+    y = verts[:, :, 1]
+
+    # -- row discovery (Alg.1 lines 6-7 on the major axis) ---------------
+    lo0 = jnp.min(jnp.where(valid, x, big), axis=1)      # (J,)
+    hi0 = jnp.max(jnp.where(valid, x, -big), axis=1)
+    i0 = _count_lt(sv0, lo0 - eps0)                      # (J,)
+    i1 = _count_le(sv0, hi0 + eps0)
+    r = i0[:, None] + jnp.arange(R, dtype=jnp.int32)[None, :]   # (J, R)
+    row_ok = r < i1[:, None]
+    rc = jnp.clip(r, 0, n0 - 1)
+    rv = sv0[rc]                                         # (J, R) values
+    row_off = base[:, None] + rowoff0[rc]                # (J, R) offsets
+
+    # -- slice every (job, row) pair at once -----------------------------
+    # Host parity: geometry.slice_vertices scales its on-plane tolerance
+    # by max(1, |major coords|max) per polytope.
+    scale = jnp.maximum(jnp.asarray(1.0, fdt),
+                        jnp.max(jnp.where(valid, jnp.abs(x), 0.0), axis=1))
+    tol = scalars[PLANE_TOL_REL] * scale                 # (J,)
+    lo1, hi1, hit = slice_minor_extents(
+        x[:, None, :], y[:, None, :], valid[:, None, :], rv, tol[:, None])
+
+    # -- column ranges on the minor axis (≤ 2 storage segments) ----------
+    if cyclic:
+        whole = (hi1 - lo1) >= period                    # whole circle
+        m = jnp.floor((lo1 - sv1[0]) / period)
+        lo_s = lo1 - m * period
+        hi_s = hi1 - m * period
+        jA0 = jnp.where(whole, 0, _count_lt(sv1, lo_s - eps1))
+        jA1 = jnp.where(whole, n1, _count_le(sv1, hi_s + eps1))
+        jB1 = jnp.where(whole, 0, _count_le(sv1, hi_s - period + eps1))
+    else:
+        jA0 = _count_lt(sv1, lo1 - eps1)
+        jA1 = _count_le(sv1, hi1 + eps1)
+        jB1 = jnp.zeros_like(jA0)
+
+    len_a = jnp.maximum(jA1 - jA0, 0)
+    ok_a = row_ok & hit & (len_a > 0)
+    len_b = jnp.maximum(jB1, 0)
+    ok_b = row_ok & hit & (len_b > 0) if cyclic \
+        else jnp.zeros_like(ok_a)
+
+    starts = jnp.stack([row_off + jA0, row_off], axis=-1)       # (J, R, 2)
+    lengths = jnp.stack([len_a, len_b], axis=-1)
+    ok = jnp.stack([ok_a, ok_b], axis=-1)
+    n_rows = jnp.sum(row_ok, dtype=jnp.int32)
+    n_points = jnp.sum(jnp.where(ok, lengths, 0), dtype=jnp.int32)
+    return starts, lengths, ok, n_rows, n_points
+
+
+@functools.partial(jax.jit, static_argnames=("n0", "n1", "max_rows",
+                                             "cyclic"))
+def plan_runs_2d(verts, valid, base, sv0, rowoff0, sv1, scalars, *,
+                 n0: int, n1: int, max_rows: int, cyclic: bool):
+    """The fused pipeline: frontier → compacted run buffer, one call.
+
+    Returns (run_starts (M,) int32, run_lengths (M,) int32,
+    meta (3,) int32 = [n_runs, n_rows, n_points]) with
+    M = J · max_rows · 2; slots past ``n_runs`` are zero.  Compaction
+    is an exclusive prefix sum over the valid-run mask — the same
+    scheme the Pallas kernel runs with its sequential-grid cursor, so
+    both produce byte-identical buffers.
+    """
+    starts, lengths, ok, n_rows, n_points = row_slots_2d(
+        verts, valid, base, sv0, rowoff0, sv1, scalars,
+        n0=n0, n1=n1, max_rows=max_rows, cyclic=cyclic)
+    m = starts.size
+    ok_f = ok.reshape(m)
+    tgt = jnp.cumsum(ok_f, dtype=jnp.int32) - ok_f       # exclusive scan
+    # invalid slots scatter to the dropped tail slot m
+    pos = jnp.where(ok_f, tgt, m)
+    run_starts = jnp.zeros(m + 1, jnp.int32).at[pos].set(
+        jnp.where(ok_f, starts.reshape(m), 0))[:m]
+    run_lengths = jnp.zeros(m + 1, jnp.int32).at[pos].set(
+        jnp.where(ok_f, lengths.reshape(m), 0))[:m]
+    n_runs = jnp.sum(ok_f, dtype=jnp.int32)
+    meta = jnp.stack([n_runs, n_rows, n_points])
+    return run_starts, run_lengths, meta

@@ -28,6 +28,67 @@ import jax.numpy as jnp
 PLANE_TOL = 1e-6
 
 
+def slice_minor_extents(x: jax.Array, y: jax.Array, valid: jax.Array,
+                        planes: jax.Array, tol_scaled: jax.Array
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Extents of the remaining coordinate after slicing, batched.
+
+    The fused planning pipeline (``repro.kernels.plan``) never needs the
+    sliced vertex *set* — only the min/max of the remaining coordinate
+    (Algorithm 1 line 6 of the next layer).  This is the same sign-split
+    + all-pairs-lerp math as :func:`slice_batch`, reduced to extents so
+    the (V × V) candidate lattice never leaves registers.  Pure jnp on
+    broadcastable shapes, so it runs identically at the top level (the
+    jnp oracle, ``core/batched.py``) and inside a Pallas kernel body.
+
+    x, y       — (..., V) sliced-axis / kept-axis vertex coordinates
+    valid      — (..., V) vertex mask
+    planes     — (...,)   slice plane per batch element
+    tol_scaled — broadcastable to (...,): absolute on-plane tolerance
+                 (callers scale: host parity wants
+                 ``geometry.PLANE_TOL * max(1, |x|max)``, the f32 batch
+                 path wants ``PLANE_TOL``-scaled)
+
+    Returns (lo, hi, hit) of shape (...,): the kept-coordinate extents
+    of the intersection and whether the plane hits at all.  ``lo``/``hi``
+    are ±inf where ``hit`` is False.  Exactly mirrors the host
+    ``geometry.slice_vertices`` candidate set: on-plane vertices keep
+    their y; every (below, above) pair contributes
+    ``y_i + t·(y_j − y_i)`` with ``t = d_i / (d_i − d_j)`` — min/max are
+    unchanged by the host's hull prune and dedupe, so in float64 the
+    extents match the host planner bit-for-bit.
+    """
+    big = jnp.asarray(jnp.inf, x.dtype)
+    tol = jnp.asarray(tol_scaled, x.dtype)[..., None]
+    d = jnp.where(valid, x - planes[..., None], big)      # (..., V)
+
+    on = valid & (jnp.abs(d) <= tol)
+    below = valid & (d < -tol)
+    above = valid & (d > tol) & jnp.isfinite(d)
+
+    y_on_lo = jnp.where(on, y, big)
+    y_on_hi = jnp.where(on, y, -big)
+
+    di = jnp.where(below, d, 0.0)[..., :, None]           # (..., V, 1)
+    dj = jnp.where(above, d, 0.0)[..., None, :]           # (..., 1, V)
+    denom = di - dj
+    t = di / jnp.where(denom == 0, 1.0, denom)            # (..., V, V)
+    yi = y[..., :, None]
+    yj = y[..., None, :]
+    yp = yi + t * (yj - yi)
+    pair = below[..., :, None] & above[..., None, :]
+    y_pair_lo = jnp.where(pair, yp, big)
+    y_pair_hi = jnp.where(pair, yp, -big)
+
+    lo = jnp.minimum(jnp.min(y_on_lo, axis=-1),
+                     jnp.min(y_pair_lo, axis=(-2, -1)))
+    hi = jnp.maximum(jnp.max(y_on_hi, axis=-1),
+                     jnp.max(y_pair_hi, axis=(-2, -1)))
+    hit = jnp.any(on, axis=-1) | (jnp.any(below, axis=-1)
+                                  & jnp.any(above, axis=-1))
+    return lo, hi, hit
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def slice_batch(verts: jax.Array, valid: jax.Array, planes: jax.Array,
                 k: int) -> tuple[jax.Array, jax.Array]:

@@ -285,6 +285,30 @@ class TestLintFixtures:
                 "                            allow_negative_one=True)\n")
         assert lint_source(good, "kernels/segment/kernel.py") == []
 
+    def test_raw_cast_in_slice_fires_once(self):
+        bad = ("import jax.numpy as jnp\n"
+               "def f(plane_rows):\n"
+               "    return plane_rows.astype(jnp.int32)\n")
+        diags = lint_source(bad, "kernels/slice/ref.py")
+        assert [d.rule for d in diags] == ["unchecked-i32-cast"]
+
+    def test_raw_cast_in_plan_fires_once(self):
+        bad = ("import jax.numpy as jnp\n"
+               "def f(run_starts):\n"
+               "    return jnp.int32(run_starts)\n")
+        diags = lint_source(bad, "kernels/plan/kernel.py")
+        assert [d.rule for d in diags] == ["unchecked-i32-cast"]
+
+    def test_typed_arange_in_plan_is_clean(self):
+        # dtype= arguments are not casts — the plan pipeline builds its
+        # int32 ramps this way (offsets validated upstream by
+        # ensure_i32_addressable / checked_cast_i32).
+        good = ("import jax.numpy as jnp\n"
+                "def f(ok, n0, n1):\n"
+                "    rowoff = jnp.arange(0, n0 * n1, n1, dtype=jnp.int32)\n"
+                "    return rowoff, jnp.cumsum(ok, dtype=jnp.int32)\n")
+        assert lint_source(good, "kernels/plan/ref.py") == []
+
     def test_cast_in_uncovered_kernel_dir_is_allowed(self):
         ok = ("import jax.numpy as jnp\n"
               "def f(x):\n"
