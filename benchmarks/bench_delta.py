@@ -1,0 +1,173 @@
+"""Delta-planning benchmark (DESIGN.md §8): drifting Zipfian request
+streams against the neighborhood index and plan splicer.
+
+Operational request streams are not just repetitive — they *drift*: the
+same crop shape tracks a storm front east or a rolling time window
+advances one forecast step per arrival.  Exact-key caching whiffs on
+every arrival of such a stream; the delta planner recognises the
+translated signature and splices the parent plan instead of re-running
+Algorithm 1.
+
+Each scenario replays an identical stream twice:
+
+  cold  — ``ExtractionService(delta=False)``: every drifted arrival is
+          an exact-cache miss and a full Algorithm-1 plan.
+  warm  — ``ExtractionService(delta=True)``: drifted arrivals splice
+          from the neighborhood index; only stream-openers plan cold.
+
+Drift offsets are exact float64 multiples of the axis step (21600 s
+datetime, 1.875 deg lon) so spliced plans are byte-identical to cold
+plans — pass ``--verify`` to run ``verify_plan`` on every spliced plan
+while timing.
+
+  PYTHONPATH=src python benchmarks/bench_delta.py [--fast] [--verify]
+
+Writes ``BENCH_delta.json`` (rows schema-checked by
+``python -m repro.analysis --bench BENCH_delta.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+LON_STEP = 1.875            # 360 / 192, exact in float64 (15/8)
+DT_STEP = 21600.0           # 6-hourly forecast step
+ZIPF_S = 1.3
+
+
+def _zipf_ranks(rng: np.random.Generator, n: int, n_bases: int) -> np.ndarray:
+    return np.minimum(rng.zipf(ZIPF_S, size=n) - 1, n_bases - 1)
+
+
+def _seam_stream(cube, rng, n_requests: int, drift_steps: int) -> list:
+    """Wide boxes tracking east across the lon seam."""
+    bases = [(15.0, 55.0, -30.0, 30.0), (-20.0, 20.0, 140.0, 200.0),
+             (30.0, 70.0, 40.0, 110.0), (-45.0, -5.0, -90.0, -30.0)]
+    offsets = [0] * len(bases)
+    stream = []
+    for rank in _zipf_ranks(rng, n_requests, len(bases)):
+        offsets[rank] += int(rng.integers(1, drift_steps + 1))
+        lat_lo, lat_hi, lon_lo, lon_hi = bases[rank]
+        d = (offsets[rank] % 192) * LON_STEP
+        stream.append(cube.seam_box_request(lat_lo, lat_hi,
+                                            lon_lo + d, lon_hi + d))
+    return stream
+
+
+def _storm_stream(cube, rng, n_requests: int, drift_steps: int) -> list:
+    """Country-shaped crops translating east (storm tracking)."""
+    from repro.core import Polygon, Request, Select
+    from repro.dataplane.weather import COUNTRIES
+
+    names = sorted(COUNTRIES)
+    offsets = [0] * len(names)
+    stream = []
+    for rank in _zipf_ranks(rng, n_requests, len(names)):
+        offsets[rank] += int(rng.integers(1, drift_steps + 1))
+        d = (offsets[rank] % 192) * LON_STEP
+        verts = COUNTRIES[names[rank]].copy()
+        verts[:, 1] += d
+        stream.append(Request([Select("datetime", [0.0]),
+                               Select("level", [0.0]),
+                               Polygon(("lat", "lon"), verts)]))
+    return stream
+
+
+def _window_stream(cube, rng, n_requests: int, drift_steps: int) -> list:
+    """Rolling forecast windows advancing along the leading axis."""
+    from repro.core import Box, Request, Span
+
+    n_steps = cube.n_dates * cube.times_per_day
+    window = n_steps // 2
+    max_t0 = n_steps - window - 1
+    bases = [(10.0, 50.0, -20.0, 25.0), (-30.0, 10.0, 100.0, 150.0)]
+    offsets = [0] * len(bases)
+    stream = []
+    for rank in _zipf_ranks(rng, n_requests, len(bases)):
+        offsets[rank] += int(rng.integers(1, drift_steps + 1))
+        t0 = (offsets[rank] % (max_t0 + 1)) * DT_STEP
+        lat_lo, lat_hi, lon_lo, lon_hi = bases[rank]
+        stream.append(Request([
+            Span("datetime", t0, t0 + (window - 1) * DT_STEP),
+            Box(("lat", "lon"), [lat_lo, lon_lo], [lat_hi, lon_hi])]))
+    return stream
+
+
+def _run_stream(datacube, stream, *, delta: bool, verify: bool) -> tuple:
+    from repro.serve.extraction import ExtractionService
+
+    svc = ExtractionService(datacube, capacity=4096, verify=verify,
+                            delta=delta)
+    t0 = time.perf_counter()
+    for req in stream:
+        svc.plan(req)
+    wall = time.perf_counter() - t0
+    return wall, svc.stats
+
+
+def bench(n_requests: int = 400, drift_steps: int = 3, seed: int = 0,
+          verify: bool = False) -> list[dict]:
+    from repro.dataplane.weather import IrregularWeatherCube
+
+    wcube = IrregularWeatherCube(n_dates=8, times_per_day=4)
+    rows = []
+    scenarios = [
+        ("seam_lon_drift", _seam_stream, drift_steps),
+        ("storm_track_lon_drift", _storm_stream, drift_steps),
+        ("rolling_window_drift", _window_stream, 1),
+    ]
+    for name, make, steps in scenarios:
+        rng = np.random.default_rng(seed)
+        stream = make(wcube, rng, n_requests, steps)
+        # verify applies to BOTH runs so the ratio stays a planning
+        # comparison, not a verification-overhead artifact
+        cold_wall, _ = _run_stream(wcube.cube, stream, delta=False,
+                                   verify=verify)
+        warm_wall, stats = _run_stream(wcube.cube, stream, delta=True,
+                                       verify=verify)
+        rows.append({
+            "scenario": name,
+            "requests": n_requests,
+            "drift_steps": steps,
+            "delta_hits": stats.delta_hits,
+            "delta_hit_rate": (stats.delta_hits / stats.misses
+                               if stats.misses else 0.0),
+            "cold_plan_ms": cold_wall / n_requests * 1e3,
+            "warm_plan_ms": warm_wall / n_requests * 1e3,
+            "speedup": cold_wall / warm_wall,
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="small stream for CI (100 requests)")
+    ap.add_argument("--verify", action="store_true",
+                    help="verify_plan every spliced plan while timing")
+    ap.add_argument("--out", default="BENCH_delta.json")
+    args = ap.parse_args()
+
+    n = 100 if args.fast else 400
+    rows = bench(n_requests=n, verify=args.verify)
+    Path(args.out).write_text(
+        json.dumps({"bench": "delta", "rows": rows}, indent=2) + "\n")
+
+    print("scenario,requests,delta_hits,delta_hit_rate,"
+          "cold_plan_ms,warm_plan_ms,speedup")
+    for r in rows:
+        print(f"{r['scenario']},{r['requests']},{r['delta_hits']},"
+              f"{r['delta_hit_rate']:.2f},{r['cold_plan_ms']:.2f},"
+              f"{r['warm_plan_ms']:.2f},{r['speedup']:.1f}")
+    worst = min(r["speedup"] for r in rows)
+    print(f"# worst-case warm-drift speedup {worst:.1f}x "
+          f"({'PASS' if worst >= 5 else 'FAIL'}: target >= 5x)")
+
+
+if __name__ == "__main__":
+    main()

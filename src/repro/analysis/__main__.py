@@ -78,7 +78,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--bench", nargs="*", metavar="JSON",
                     help="bench files to schema-check (default: "
                          "BENCH_extraction.json / BENCH_serve.json / "
-                         "BENCH_kernels.json when present)")
+                         "BENCH_kernels.json / BENCH_delta.json "
+                         "when present)")
     ap.add_argument("--plan", nargs="*", metavar="PKL", default=[],
                     help="pickled ExtractionPlan files to verify")
     ap.add_argument("--n-elements", type=int, default=None,
@@ -101,7 +102,7 @@ def main(argv: list[str] | None = None) -> int:
     bench_files = list(args.bench or [])
     if args.all and not bench_files:
         for name in ("BENCH_extraction.json", "BENCH_serve.json",
-                     "BENCH_kernels.json"):
+                     "BENCH_kernels.json", "BENCH_delta.json"):
             default_bench = Path.cwd() / name
             if default_bench.exists():
                 bench_files.append(default_bench)

@@ -64,10 +64,26 @@ KERNELS_ROW_SCHEMA: dict[str, type | None] = {
     "compress_ratio": numbers.Number,
 }
 
+# Drifting-workload delta-planning bench (benchmarks/bench_delta.py):
+# a Zipfian request stream whose polytopes translate between arrivals.
+# Columns compare cold re-planning against neighborhood splicing and
+# report how often the drift window actually hit.
+DELTA_ROW_SCHEMA: dict[str, type | None] = {
+    "scenario": str,
+    "requests": numbers.Number,
+    "drift_steps": numbers.Number,
+    "delta_hits": numbers.Number,
+    "delta_hit_rate": numbers.Number,
+    "cold_plan_ms": numbers.Number,
+    "warm_plan_ms": numbers.Number,
+    "speedup": numbers.Number,
+}
+
 ROW_SCHEMAS: dict[str, dict[str, type | None]] = {
     "extraction": EXTRACTION_ROW_SCHEMA,
     "serve": SERVE_ROW_SCHEMA,
     "kernels": KERNELS_ROW_SCHEMA,
+    "delta": DELTA_ROW_SCHEMA,
 }
 
 

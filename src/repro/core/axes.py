@@ -86,6 +86,14 @@ class OrderedAxis(Axis):
         out[self._order] = self._sorted
         return out
 
+    @property
+    def is_storage_sorted(self) -> bool:
+        """True iff storage order equals ascending value order — the
+        precondition for positional index arithmetic (a shift of ``s``
+        index steps moves every storage position by exactly ``s``),
+        which the delta planner relies on."""
+        return self._order is None
+
     def to_float(self, value: Any) -> float:
         return float(self._to_float(np.asarray([value]))[0])
 

@@ -110,6 +110,12 @@ class TensorDatacube(Datacube):
     def stride(self, name: str) -> int:
         return self._strides[name]
 
+    def logical_stride(self, name: str) -> int:
+        """Flat-offset increment per +1 step of ``name``'s position —
+        identical to :meth:`stride` on a regular cube (the
+        transform-aware spelling lives on ``TransformedDatacube``)."""
+        return self._strides[name]
+
     def base_offset(self, path: Mapping[str, int]) -> int:
         return int(sum(self._strides[n] * p for n, p in path.items()))
 
@@ -320,6 +326,21 @@ class TransformedDatacube(Datacube):
         for s, col in zip(t.storage_names, t.storage_positions(pos)):
             out += col * self.base.stride(s)
         return out
+
+    def logical_stride(self, name: str) -> int:
+        """Flat-offset increment per +1 step of logical position on
+        ``name``.  Exists (and is constant) for every transform kind:
+        plain and single-storage transforms (cyclic, mapped) map
+        positions identically, so the storage stride carries over; a
+        merged pair's logical position ``p`` resolves to
+        ``maj_stride·(p // n_minor) + min_stride·(p % n_minor)`` which,
+        because the pair is consecutive in the base cube's row-major
+        order (``maj_stride == n_minor·min_stride``), collapses to
+        ``min_stride·p``."""
+        t = self._transforms.get(name)
+        if t is None:
+            return self.base.stride(name)
+        return self.base.stride(t.storage_names[-1])
 
     @property
     def n_elements(self) -> int:

@@ -141,12 +141,24 @@ def flatten(root: IndexNode, datacube: Datacube) -> ExtractionPlan:
         col = np.concatenate(cols)
         if len(col) == n_total:
             coords[ax_name] = col
-    # Plans are emitted in ascending storage order: runs become ascending
-    # burst reads and sortedness is a checkable invariant
-    # (repro.analysis.plan_check).  Tree-walk order is *almost* storage
-    # order already, but e.g. a seam-straddling cyclic range emits the
-    # wrapped sub-interval after the unwrapped one; the coordinate
-    # columns are permuted in lockstep so point↔coord pairing is intact.
+    return assemble_plan(offs, coords, datacube.dtype.itemsize)
+
+
+def assemble_plan(offs: np.ndarray, coords: dict[str, np.ndarray],
+                  itemsize: int) -> ExtractionPlan:
+    """Sort, coalesce and wrap raw (offsets, coords) into a plan.
+
+    Plans are emitted in ascending storage order: runs become ascending
+    burst reads and sortedness is a checkable invariant
+    (repro.analysis.plan_check).  Tree-walk order is *almost* storage
+    order already, but e.g. a seam-straddling cyclic range emits the
+    wrapped sub-interval after the unwrapped one; the coordinate
+    columns are permuted in lockstep so point↔coord pairing is intact.
+    Shared by :func:`flatten` and the delta planner's splice path
+    (core/delta_planner.py), so a spliced plan goes through the exact
+    emission discipline of a cold one.
+    """
+    n_total = len(offs)
     order = np.argsort(offs, kind="stable")
     if not np.array_equal(order, np.arange(n_total)):
         offs = offs[order]
@@ -154,7 +166,7 @@ def flatten(root: IndexNode, datacube: Datacube) -> ExtractionPlan:
     starts, lengths = coalesce_runs(offs)
     return ExtractionPlan(offsets=offs, run_starts=starts,
                           run_lengths=lengths, coords=coords,
-                          itemsize=datacube.dtype.itemsize)
+                          itemsize=itemsize)
 
 
 def coalesce_runs(offsets: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

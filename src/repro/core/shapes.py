@@ -35,7 +35,19 @@ CANON_TOL = 1e-9
 
 
 def _quantize(arr: np.ndarray, tol: float) -> np.ndarray:
-    """Snap coordinates to a grid of size ``tol`` (normalising -0.0)."""
+    """Snap coordinates to a grid of size ``tol`` (normalising -0.0).
+
+    Grid snapping is inherently unstable at cell boundaries: two values
+    within ``tol`` of each other can straddle a cell midpoint and land
+    in adjacent cells (e.g. ``0.49·tol`` → cell 0, ``0.51·tol`` → cell
+    1), so sub-tolerance-equal requests are *usually*, not *always*,
+    assigned the same canonical key (pinned by the straddle regression
+    test in tests/test_plan_cache.py).  Exact-match cache consumers
+    tolerate this — a straddled key is only a spurious cold plan — and
+    the neighborhood index recovers it: straddled anchors differ by one
+    quantum, which resolves to a zero-step drift and reuses the parent
+    plan (see ``repro.core.delta_planner``).
+    """
     q = np.round(np.asarray(arr, np.float64) / tol) * tol
     return q + 0.0
 
@@ -117,6 +129,79 @@ def canonical_hash(polys: Sequence[Polytope], selects: Sequence["Select"],
     sha256 over the repr of nested tuples of strings/floats)."""
     key = canonical_key(polys, selects, tol, periods)
     return hashlib.sha256(repr(key).encode()).hexdigest()
+
+
+def _is_numeric(v: Any) -> bool:
+    """Numeric select values participate in translation (drift); bools,
+    strings and other labels do not."""
+    return (isinstance(v, (int, float, np.integer, np.floating))
+            and not isinstance(v, bool))
+
+
+def shape_signature(polys: Sequence[Polytope], selects: Sequence["Select"],
+                    tol: float = CANON_TOL) -> tuple[tuple,
+                                                     dict[str, float]]:
+    """Translation-invariant signature of a primitive decomposition.
+
+    The signature is the canonical form quotiented by per-axis
+    translation: every vertex coordinate and numeric select value is
+    expressed relative to the request's per-axis *anchor* (the minimum
+    coordinate seen on that axis), then quantized exactly like
+    :func:`canonical_key`.  Two requests that are translates of each
+    other — the same flight corridor advanced one timestep, the same
+    country crop for the next forecast cycle — therefore share a
+    signature while their anchors differ by the drift vector.  The
+    neighborhood index (DESIGN.md §8) keys on the signature hash and
+    stores anchors separately, so a drifted request resolves to its
+    parent plan and only the drift delta remains to be applied.
+
+    No period folding is applied: translation by a whole period *is* a
+    translation, so seam-shifted spellings already share a signature
+    (their anchors differ by the period, which the delta planner reduces
+    modulo the axis length).
+
+    Returns ``(signature_key, anchor)`` with ``anchor`` holding the raw
+    (unquantized) per-axis minima — the delta planner needs exact floats
+    to recover integer index steps; quantization noise is absorbed by
+    its integer-step tolerance.
+    """
+    anchor: dict[str, float] = {}
+    for p in polys:
+        for j, ax in enumerate(p.axes):
+            m = float(p.points[:, j].min())
+            anchor[ax] = min(anchor.get(ax, m), m)
+    for s in selects:
+        for v in s.values:
+            if _is_numeric(v):
+                f = float(v)
+                anchor[s.axis] = min(anchor.get(s.axis, f), f)
+
+    poly_keys: set[tuple] = set()
+    for p in polys:
+        a = np.array([anchor[ax] for ax in p.axes], np.float64)
+        pts = _quantize(p.points - a, tol)
+        rows = tuple(sorted(set(map(tuple, pts.tolist()))))
+        poly_keys.add((tuple(p.axes), rows))
+    sel_vals: dict[str, set] = {}
+    for s in selects:
+        bucket = sel_vals.setdefault(s.axis, set())
+        for v in s.values:
+            if _is_numeric(v):
+                q = float(_quantize(np.array(float(v) - anchor[s.axis]),
+                                    tol))
+                bucket.add(("f", repr(q)))
+            else:
+                bucket.add(_canon_value(v, tol))
+    sel_keys = tuple(sorted(
+        (ax, tuple(sorted(vals))) for ax, vals in sel_vals.items()))
+    return (tuple(sorted(poly_keys)), sel_keys), anchor
+
+
+def signature_hash(polys: Sequence[Polytope], selects: Sequence["Select"],
+                   tol: float = CANON_TOL) -> tuple[str, dict[str, float]]:
+    """Stable sha256 of :func:`shape_signature`'s key, plus the anchor."""
+    key, anchor = shape_signature(polys, selects, tol)
+    return hashlib.sha256(repr(key).encode()).hexdigest(), anchor
 
 
 class Shape:
@@ -314,7 +399,20 @@ class Request:
     shapes: Sequence[Shape]
 
     def polytopes(self) -> list[Polytope]:
-        return [p for s in self.shapes for p in s.polytopes()]
+        """Primitive decomposition, memoized per Request object.
+
+        Triangulating a concave polygon (ear-clipping) dominates the
+        cost and the decomposition is consumed repeatedly — canonical
+        hash, shape signature, extent probes and the slicer all start
+        here.  Mutating ``shapes`` after the first call is not
+        supported (the same contract as :meth:`canonical_hash`).
+        Callers must not mutate the returned list.
+        """
+        polys = self.__dict__.get("_polytopes")
+        if polys is None:
+            polys = [p for s in self.shapes for p in s.polytopes()]
+            self.__dict__["_polytopes"] = polys
+        return polys
 
     def selects(self) -> list[Select]:
         return [q for s in self.shapes for q in s.selects()]
@@ -359,6 +457,22 @@ class Request:
                                periods)
             cache[(tol, pkey)] = h
         return h
+
+    def shape_signature(self, tol: float = CANON_TOL
+                        ) -> tuple[str, dict[str, float]]:
+        """Translation-invariant signature hash + per-axis anchor.
+
+        Memoized like :meth:`canonical_hash` (the decomposition
+        dominates); the anchor dict is shared, callers must not mutate
+        it.  Drifted requests share the hash; their anchors differ by
+        the drift vector (see :func:`shape_signature`).
+        """
+        cache = self.__dict__.setdefault("_sig_cache", {})
+        out = cache.get(tol)
+        if out is None:
+            out = signature_hash(self.polytopes(), self.selects(), tol)
+            cache[tol] = out
+        return out
 
 
 # ---------------------------------------------------------------------------

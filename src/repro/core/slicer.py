@@ -114,7 +114,16 @@ class Slicer:
             else:
                 self._device_planner = device_planner
 
-    def build_index_tree(self, request: Request) -> tuple[IndexNode, SliceStats]:
+    def build_index_tree(self, request: Request,
+                         lead_filter: "frozenset[int] | set[int] | None"
+                         = None) -> tuple[IndexNode, SliceStats]:
+        """Run Algorithm 1; with ``lead_filter`` the *root* (leading
+        axis) expansion is restricted to those storage positions, so the
+        delta planner (core/delta_planner.py) can re-slice exactly the
+        leading-axis slabs whose intersections changed under a drift and
+        splice the rest arithmetically.  Deeper levels are unaffected —
+        a filtered run is byte-identical to the matching slabs of the
+        unfiltered tree."""
         t0 = time.perf_counter()
         stats = SliceStats()
         root = IndexNode()
@@ -130,10 +139,12 @@ class Slicer:
                 item.node.complete = True
                 continue
             axis = self.datacube.axis(axis_name, item.path)
+            pos_filter = lead_filter if not item.path else None
             if isinstance(axis, CategoricalAxis):
                 self._expand_categorical(item, axis_name, axis, frontier)
             else:
-                self._expand_ordered(item, axis_name, axis, frontier, stats)
+                self._expand_ordered(item, axis_name, axis, frontier,
+                                     stats, pos_filter=pos_filter)
 
         stats.n_points = root.n_points()
         stats.total_time_s = time.perf_counter() - t0
@@ -195,16 +206,24 @@ class Slicer:
     # -- ordered axes --------------------------------------------------------
     def _expand_ordered(self, item: _Item, axis_name: str,
                         axis: OrderedAxis, frontier: deque,
-                        stats: SliceStats) -> None:
+                        stats: SliceStats,
+                        pos_filter: "frozenset[int] | set[int] | None"
+                        = None) -> None:
         mine = [p for p in item.polys if axis_name in p.axes]
         rest = [p for p in item.polys if axis_name not in p.axes]
         sel_mine = [s for s in item.selects if s.axis == axis_name]
         sel_rest = [s for s in item.selects if s.axis != axis_name]
 
+        def narrowed(pos: np.ndarray, vals: np.ndarray):
+            if pos_filter is None:
+                return pos, vals
+            keep = np.fromiter((int(p) in pos_filter for p in pos),
+                               bool, count=len(pos))
+            return pos[keep], vals[keep]
+
         if not mine and not sel_mine:
             # Implicit All over an ordered axis.
-            pos = np.arange(len(axis))
-            vals = axis.values
+            pos, vals = narrowed(np.arange(len(axis)), axis.values)
             self._emit(item, axis_name, pos, vals, None, rest, sel_rest,
                        frontier, stats)
             return
@@ -216,8 +235,9 @@ class Slicer:
                 p, val = axis.nearest(axis.to_float(v))
                 pos_list.append(p)
                 val_list.append(val)
-            self._emit(item, axis_name, np.asarray(pos_list, np.int64),
-                       np.asarray(val_list), None, rest, sel_rest,
+            pos, vals = narrowed(np.asarray(pos_list, np.int64),
+                                 np.asarray(val_list))
+            self._emit(item, axis_name, pos, vals, None, rest, sel_rest,
                        frontier, stats)
 
         for poly in mine:
@@ -225,6 +245,7 @@ class Slicer:
             # independently; results merge in the shared children dict.
             lo, hi = poly.extents(axis_name)           # Alg.1 line 6
             pos, vals = axis.indices_in_range(lo, hi)  # Alg.1 line 7
+            pos, vals = narrowed(pos, vals)
             self._emit(item, axis_name, pos, vals, poly, rest, sel_rest,
                        frontier, stats)
 

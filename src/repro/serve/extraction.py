@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import PolytopeExtractor, Request, gather
 from repro.core.datacube import Datacube
+from repro.core.delta_planner import DeltaPlanner
 from repro.core.index_tree import ExtractionPlan, coalesce_runs
 from repro.core.shapes import CANON_TOL
 from repro.core.slicer import SliceStats
@@ -52,6 +53,10 @@ class CacheStats:
     bytes_read: int = 0             # union reads actually issued
     plans_shipped: int = 0          # cold plans shipped to peer replicas
     plans_received: int = 0         # peer plans installed locally
+    migrations: int = 0             # entries popped for shard rebalance
+    delta_hits: int = 0             # misses served by plan splicing
+    delta_misses: int = 0           # misses with no splicable neighbor
+    delta_time_s: float = 0.0       # cumulative splice walltime
 
     @property
     def lookups(self) -> int:
@@ -64,9 +69,18 @@ class CacheStats:
 
     @property
     def sharing_factor(self) -> float:
-        """requested/read ≥ 1: how much the batch union read saved."""
-        return self.bytes_requested / self.bytes_read if self.bytes_read \
-            else 1.0
+        """requested/read ≥ 1: how much the batch union read saved.
+
+        Edge cases are explicit: nothing requested *and* nothing read
+        (only empty plans in the batch) shares nothing and reports the
+        neutral 1.0; bytes requested with **zero** bytes read is
+        infinite sharing (``inf``), not 1.0 — returning 1.0 here would
+        silently under/over-report savings on empty-gather batches
+        (pinned by the regression test in tests/test_plan_cache.py).
+        """
+        if self.bytes_read:
+            return self.bytes_requested / self.bytes_read
+        return float("inf") if self.bytes_requested else 1.0
 
 
 def merge_stats(parts: Iterable[CacheStats]) -> CacheStats:
@@ -124,10 +138,29 @@ class PlanCache:
                 self._od.popitem(last=False)
                 self.stats.evictions += 1
 
-    def pop(self, key: str) -> ExtractionPlan | None:
-        """Remove and return ``key``'s plan (shard-rebalance migration)."""
+    def peek(self, key: str) -> ExtractionPlan | None:
+        """Uncounted, non-mutating lookup: the delta planner fetching a
+        *parent* plan is not a request-path cache lookup, so it must not
+        perturb the hit/miss counters (``lookups == hits + misses``
+        stays tied to served requests) nor the LRU order (eviction
+        reflects what users requested, not which parents were spliced
+        from — the freshly spliced child is put at MRU anyway)."""
         with self._lock:
-            return self._od.pop(key, None)
+            return self._od.get(key)
+
+    def pop(self, key: str) -> ExtractionPlan | None:
+        """Remove and return ``key``'s plan (shard-rebalance migration).
+
+        Counts ``stats.migrations`` when an entry was actually removed —
+        without the counter, rebalance mutated the cache invisibly and
+        the stats-conservation invariant in
+        tests/test_serve_concurrent.py silently ignored migrated
+        entries."""
+        with self._lock:
+            plan = self._od.pop(key, None)
+            if plan is not None:
+                self.stats.migrations += 1
+            return plan
 
     def keys(self) -> list[str]:
         """LRU → MRU order (eviction order is the front)."""
@@ -145,6 +178,96 @@ class PlanCache:
         """Consistent copy of the counters (safe to aggregate lock-free)."""
         with self._lock:
             return replace(self.stats)
+
+
+@dataclass
+class NeighborEntry:
+    """One remembered request under a shape signature: where its plan
+    lives (exact cache key), its per-axis anchor, and what it asked for
+    (the delta planner re-slices changed leading slabs against it)."""
+
+    key: str
+    anchor: dict[str, float]
+    request: Request
+    stats: SliceStats
+
+
+class NeighborhoodIndex:
+    """Bounded two-level LRU: ``shape signature → recent requests``.
+
+    The exact-match LRU misses every *drifted* repeat of a request; this
+    index keys on the translation-invariant signature
+    (``Request.shape_signature``) so a drifted request finds its parent
+    plan, with the anchor delta left for the delta planner to apply.
+    ``per_signature`` bounds the anchors remembered per shape; candidates
+    come back MRU-first so the nearest parent is tried first.  The bound
+    must absorb *interleaved* chains: congruent shapes at incompatible
+    anchors (e.g. same-size boxes at different latitudes on the
+    non-uniform Gaussian axis) share a signature, and a Zipf-skewed hot
+    chain can flush a colder chain's parent out of too small a window.
+
+    Thread-safe behind its own lock — entries are immutable once added.
+    """
+
+    def __init__(self, capacity: int = 1024, per_signature: int = 32):
+        if capacity < 1 or per_signature < 1:
+            raise ValueError("capacity and per_signature must be >= 1")
+        self.capacity = capacity
+        self.per_signature = per_signature
+        self._od: OrderedDict[str, OrderedDict[str, NeighborEntry]] = \
+            OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(inner) for inner in self._od.values())
+
+    def add(self, sig: str, key: str, anchor: dict[str, float],
+            request: Request, stats: SliceStats) -> None:
+        with self._lock:
+            inner = self._od.get(sig)
+            if inner is None:
+                inner = OrderedDict()
+                self._od[sig] = inner
+            else:
+                self._od.move_to_end(sig)
+            if key in inner:
+                inner.move_to_end(key)
+            inner[key] = NeighborEntry(key=key, anchor=anchor,
+                                       request=request, stats=stats)
+            while len(inner) > self.per_signature:
+                inner.popitem(last=False)
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+
+    def candidates(self, sig: str) -> list[NeighborEntry]:
+        """Entries under ``sig``, most-recently-added first."""
+        with self._lock:
+            inner = self._od.get(sig)
+            if inner is None:
+                return []
+            self._od.move_to_end(sig)
+            return list(reversed(inner.values()))
+
+    # -- sharded-migration surface (repro.serve.sharded) -------------------
+    def signatures(self) -> list[str]:
+        with self._lock:
+            return list(self._od)
+
+    def pop_signature(self, sig: str
+                      ) -> "OrderedDict[str, NeighborEntry] | None":
+        with self._lock:
+            return self._od.pop(sig, None)
+
+    def install(self, sig: str,
+                entries: "OrderedDict[str, NeighborEntry]") -> None:
+        with self._lock:
+            inner = self._od.setdefault(sig, OrderedDict())
+            inner.update(entries)
+            while len(inner) > self.per_signature:
+                inner.popitem(last=False)
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
 
 
 @dataclass
@@ -172,7 +295,8 @@ class ExtractionService:
     def __init__(self, datacube: Datacube, capacity: int = 1024,
                  use_kernel: bool = False, tol: float = CANON_TOL,
                  periods: dict[str, float] | None = None,
-                 verify: bool = False):
+                 verify: bool = False, delta: bool = True,
+                 drift_steps: int = 64):
         self.datacube = datacube
         # verify=True machine-checks every cold plan AND every shared
         # union plan against the invariants in repro.analysis.plan_check
@@ -188,6 +312,17 @@ class ExtractionService:
         # plan cache hits across the seam (DESIGN.md §2.5).
         self.periods = dict(periods) if periods is not None \
             else datacube.axis_periods()
+        # delta=True routes exact-cache misses through the neighborhood
+        # index + delta planner (DESIGN.md §8) before falling back to a
+        # cold Algorithm-1 run; ineligible drifts fall through
+        # transparently, same opt-out contract as the device planner.
+        self.delta_planner = None
+        self.neighborhood = None
+        if delta:
+            self.delta_planner = DeltaPlanner(
+                datacube, slicer=self.extractor.slicer,
+                max_steps=drift_steps)
+            self.neighborhood = NeighborhoodIndex(capacity)
         self._lock = threading.Lock()
 
     @property
@@ -207,11 +342,62 @@ class ExtractionService:
             plan = self.cache.get(key)
             if plan is not None:
                 return plan, True, key
-            t0 = time.perf_counter()
-            plan, _ = self.extractor.plan(request)
-            self.cache.stats.plan_time_s += time.perf_counter() - t0
-            self.cache.put(key, plan)
+            plan, _ = self._plan_miss(request, key)
             return plan, False, key
+
+    def _plan_miss(self, request: Request,
+                   key: str) -> tuple[ExtractionPlan, SliceStats]:
+        """Serve an exact-cache miss (caller holds ``self._lock``):
+        try a delta splice from a drifted neighbor first, cold-plan
+        otherwise; either way install the plan and index the request's
+        signature for future drifts."""
+        if self.delta_planner is not None:
+            out = self._try_delta(request, key)
+            if out is not None:
+                return out
+        t0 = time.perf_counter()
+        plan, stats = self.extractor.plan(request)
+        dt = time.perf_counter() - t0
+        self.cache.stats.plan_time_s += dt  # unlocked-ok: caller holds _lock
+        self.cache.put(key, plan)           # unlocked-ok: caller holds _lock
+        if self.neighborhood is not None and stats is not None:
+            sig, anchor = request.shape_signature(self.tol)
+            self.neighborhood.add(sig, key, anchor, request, stats)
+        return plan, stats
+
+    def _try_delta(self, request: Request, key: str
+                   ) -> "tuple[ExtractionPlan, SliceStats] | None":
+        """Resolve the request's signature in the neighborhood index and
+        splice from the nearest parent whose drift is eligible.  Spliced
+        plans verify (when ``self.verify``), install under the exact
+        key, and re-index — so a drift *chain* keeps splicing from its
+        latest member instead of walking back to the origin."""
+        t0 = time.perf_counter()
+        sig, anchor = request.shape_signature(self.tol)
+        for entry in self.neighborhood.candidates(sig):
+            shifts = self.delta_planner.axis_shifts(entry.anchor, anchor)
+            if shifts is None:
+                continue
+            parent = self.cache.peek(entry.key)  # unlocked-ok: caller holds _lock
+            if parent is None:
+                continue   # parent evicted under the index entry
+            out = self.delta_planner.splice(request, entry.request,
+                                            parent, entry.stats, shifts)
+            if out is None:
+                continue
+            plan, stats = out
+            if self.verify:
+                from repro.analysis.plan_check import verify_plan
+
+                verify_plan(plan, datacube=self.datacube, stats=stats)
+            self.cache.put(key, plan)  # unlocked-ok: caller holds _lock
+            self.neighborhood.add(sig, key, anchor, request, stats)
+            dt = time.perf_counter() - t0
+            self.cache.stats.delta_hits += 1  # unlocked-ok: caller holds _lock
+            self.cache.stats.delta_time_s += dt  # unlocked-ok: caller holds _lock
+            return plan, stats
+        self.cache.stats.delta_misses += 1  # unlocked-ok: caller holds _lock
+        return None
 
     def extract(self, request: Request,
                 flat_data: Any | None = None) -> ServiceResult:
@@ -244,11 +430,7 @@ class ExtractionService:
                 stats = None
                 cached = plan is not None
                 if plan is None:
-                    t0 = time.perf_counter()
-                    plan, stats = self.extractor.plan(req)
-                    self.cache.stats.plan_time_s += \
-                        time.perf_counter() - t0
-                    self.cache.put(key, plan)
+                    plan, stats = self._plan_miss(req, key)
                 batch_plans[key] = plan
                 results.append(ServiceResult(
                     request=req, key=key, plan=plan, cached=cached,

@@ -36,16 +36,18 @@ import pickle
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, fields, replace
 from typing import Any, Iterable, Sequence
 
 from repro.core import PolytopeExtractor, Request
 from repro.core.datacube import Datacube
+from repro.core.delta_planner import DeltaPlanner
 from repro.core.index_tree import ExtractionPlan
 from repro.core.shapes import CANON_TOL
 from repro.distributed.sharding import HashRing
-from repro.serve.extraction import (CacheStats, PlanCache, ServiceResult,
-                                    merge_stats, shared_union_gather)
+from repro.serve.extraction import (CacheStats, NeighborhoodIndex,
+                                    PlanCache, ServiceResult, merge_stats,
+                                    shared_union_gather)
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +103,13 @@ class ShardedPlanCache:
         self.capacity_per_shard = capacity_per_shard
         self._caches: dict[str, PlanCache] = {
             n: PlanCache(capacity_per_shard) for n in names}
+        # Per-shard neighborhood indices, routed by *signature* hash —
+        # drifted variants of one shape share a signature, so they all
+        # route to the same shard's index regardless of which shards
+        # their exact keys live on (parent plans fetch globally via
+        # :meth:`peek`).
+        self._hoods: dict[str, NeighborhoodIndex] = {
+            n: NeighborhoodIndex(capacity_per_shard) for n in names}
         self.ring = HashRing(names, replicas=replicas)
         self._admin_lock = threading.Lock()
 
@@ -119,6 +128,15 @@ class ShardedPlanCache:
     # -- the PlanCache surface, sharded ------------------------------------
     def get(self, key: str) -> ExtractionPlan | None:
         return self.entry_of(key)[1].get(key)
+
+    def peek(self, key: str) -> ExtractionPlan | None:
+        """Uncounted cross-shard plan fetch (delta-planner parents)."""
+        return self.entry_of(key)[1].peek(key)
+
+    def hood_of(self, sig: str) -> NeighborhoodIndex:
+        """Neighborhood index owning signature ``sig`` (consistent
+        routing: every drifted variant of a shape resolves here)."""
+        return self._hoods[self.ring.route(sig)]
 
     def put(self, key: str, plan: ExtractionPlan) -> None:
         self.entry_of(key)[1].put(key, plan)
@@ -154,22 +172,36 @@ class ShardedPlanCache:
                 raise ValueError(f"shard {name!r} already exists")
             # publish the cache before the ring can route to it
             self._caches.update({name: PlanCache(self.capacity_per_shard)})
+            self._hoods.update(
+                {name: NeighborhoodIndex(self.capacity_per_shard)})
             self.ring.add_node(name)
             return self._migrate()
 
     def remove_shard(self, name: str) -> int:
-        """Drain a shard: its entries migrate to their new owners."""
+        """Drain a shard: its entries migrate to their new owners.
+
+        The drained shard's *counters* fold into a surviving shard
+        before the cache object is dropped, so fleet-wide ``stats``
+        conserve across topology changes (including the ``migrations``
+        the drain itself just counted)."""
         with self._admin_lock:
             if name not in self._caches or len(self._caches) == 1:
                 raise ValueError(f"cannot remove shard {name!r}")
             self.ring.remove_node(name)
             moved = self._migrate(drain=name)
-            self._caches.pop(name)
+            drained = self._caches.pop(name).snapshot()
+            self._hoods.pop(name)
+            survivor = self._caches[self.ring.nodes[0]]
+            survivor.record(**{f.name: getattr(drained, f.name)
+                               for f in fields(CacheStats)})
             return moved
 
     def _migrate(self, drain: str | None = None) -> int:
         """Move every entry whose ring owner changed (caller holds the
-        admin mutex; per-entry moves use the shard caches' own locks)."""
+        admin mutex; per-entry moves use the shard caches' own locks).
+        ``PlanCache.pop`` counts each move in the source shard's
+        ``stats.migrations``; neighborhood entries reroute by signature
+        alongside (uncounted — they index plans, they aren't plans)."""
         moved = 0
         for old_name in list(self._caches):
             cache = self._caches[old_name]
@@ -181,6 +213,15 @@ class ShardedPlanCache:
                 if plan is not None:   # racing eviction — nothing to move
                     self._caches[owner].put(key, plan)
                     moved += 1
+        for old_name in list(self._hoods):
+            hood = self._hoods[old_name]
+            for sig in hood.signatures():
+                owner = self.ring.route(sig)
+                if owner == old_name and old_name != drain:
+                    continue
+                entries = hood.pop_signature(sig)
+                if entries:
+                    self._hoods[owner].install(sig, entries)
         return moved
 
 
@@ -205,7 +246,8 @@ class ShardedExtractionService:
                  tol: float = CANON_TOL,
                  periods: dict[str, float] | None = None,
                  verify: bool = False, replicas: int = 64,
-                 name: str = "replica0"):
+                 name: str = "replica0", delta: bool = True,
+                 drift_steps: int = 64):
         self.datacube = datacube
         self.verify = verify
         self.name = name
@@ -213,6 +255,14 @@ class ShardedExtractionService:
                                            verify=verify)
         self.shards = ShardedPlanCache(shards, capacity_per_shard,
                                        replicas=replicas)
+        # Same transparent-fallback contract as ExtractionService: an
+        # exact-cache miss first tries a delta splice from the
+        # signature-routed neighborhood before planning cold.
+        self.delta_planner = None
+        if delta:
+            self.delta_planner = DeltaPlanner(
+                datacube, slicer=self.extractor.slicer,
+                max_steps=drift_steps)
         self.tol = tol
         self.periods = dict(periods) if periods is not None \
             else datacube.axis_periods()
@@ -252,12 +302,58 @@ class ShardedExtractionService:
             plan = cache.get(key)   # counted; did a racing thread win?
             if plan is not None:
                 return plan, True, key, None
-            t0 = time.perf_counter()
-            plan, sstats = self.extractor.plan(request)
-            cache.record(plan_time_s=time.perf_counter() - t0)
-            cache.put(key, plan)
+            spliced = None
+            if self.delta_planner is not None:
+                spliced = self._try_delta(request, key, cache)
+            if spliced is not None:
+                plan, sstats = spliced
+            else:
+                t0 = time.perf_counter()
+                plan, sstats = self.extractor.plan(request)
+                cache.record(plan_time_s=time.perf_counter() - t0)
+                cache.put(key, plan)
+                self._index_neighbor(request, key, sstats)
         self._ship(key, plan)
         return plan, False, key, sstats
+
+    def _try_delta(self, request: Request, key: str, cache: PlanCache):
+        """Splice from a drifted neighbor (caller holds the shard's
+        plan lock).  The signature routes to one shard's neighborhood;
+        parent plans fetch cross-shard by their exact keys.  Returns
+        ``(plan, stats)`` or ``None`` (→ plan cold)."""
+        t0 = time.perf_counter()
+        sig, anchor = request.shape_signature(self.tol)
+        hood = self.shards.hood_of(sig)
+        for entry in hood.candidates(sig):
+            shifts = self.delta_planner.axis_shifts(entry.anchor, anchor)
+            if shifts is None:
+                continue
+            parent = self.shards.peek(entry.key)
+            if parent is None:
+                continue   # parent evicted under the index entry
+            out = self.delta_planner.splice(request, entry.request,
+                                            parent, entry.stats, shifts)
+            if out is None:
+                continue
+            plan, stats = out
+            if self.verify:
+                from repro.analysis.plan_check import verify_plan
+
+                verify_plan(plan, datacube=self.datacube, stats=stats)
+            cache.put(key, plan)
+            hood.add(sig, key, anchor, request, stats)
+            cache.record(delta_hits=1,
+                         delta_time_s=time.perf_counter() - t0)
+            return plan, stats
+        cache.record(delta_misses=1)
+        return None
+
+    def _index_neighbor(self, request: Request, key: str,
+                        stats) -> None:
+        if self.delta_planner is None or stats is None:
+            return
+        sig, anchor = request.shape_signature(self.tol)
+        self.shards.hood_of(sig).add(sig, key, anchor, request, stats)
 
     # -- batched serving ---------------------------------------------------
     def extract(self, request: Request,

@@ -309,3 +309,86 @@ if HAVE_HYPOTHESIS:
                     .canonical_hash() !=
                     Request([ConvexPolytope(("a", "b"), _TRI)])
                     .canonical_hash())
+
+
+class TestCacheStatsEdges:
+    """Regressions for the sharing_factor division edge cases."""
+
+    def test_sharing_factor_no_reads(self):
+        from repro.serve.extraction import CacheStats
+        assert CacheStats().sharing_factor == 1.0
+
+    def test_sharing_factor_requested_but_nothing_read(self):
+        # fully deduped batch: bytes were requested yet none hit storage
+        from repro.serve.extraction import CacheStats
+        st = CacheStats(bytes_requested=4096, bytes_read=0)
+        assert st.sharing_factor == float("inf")
+
+    def test_sharing_factor_ratio(self):
+        from repro.serve.extraction import CacheStats
+        st = CacheStats(bytes_requested=300, bytes_read=100)
+        assert st.sharing_factor == 3.0
+
+
+class TestPlanCachePeekAndPop:
+    def test_peek_is_uncounted_and_preserves_lru_order(self):
+        pc = PlanCache(capacity=2)
+        pc.put("k1", "p1")
+        pc.put("k2", "p2")
+        assert pc.peek("k1") == "p1"
+        assert pc.peek("missing") is None
+        assert pc.stats.lookups == 0          # not a request-path lookup
+        pc.put("k3", "p3")                    # k1 still LRU → evicted
+        assert "k1" not in pc
+        assert "k2" in pc and "k3" in pc
+
+    def test_pop_counts_migrations_only_when_present(self):
+        pc = PlanCache(capacity=4)
+        pc.put("k", "p")
+        assert pc.pop("k") == "p"
+        assert pc.stats.migrations == 1
+        assert pc.pop("k") is None            # second pop is a no-op
+        assert pc.stats.migrations == 1
+
+
+class TestQuantizeStraddle:
+    """Two requests 0.75e-9 apart can quantize to *different* exact
+    cache keys (the 1e-9 quantum boundary falls between them) while
+    selecting identical cells.  The translation-invariant signature is
+    immune — relative coordinates cancel the jitter — so the
+    neighborhood index recovers the miss as a zero-shift delta hit that
+    reuses the parent plan object outright."""
+
+    JITTER = 0.75e-9
+
+    def box_req(self, j=0.0):
+        return Request([Box(("a", "b"), [3.0 + j, 3.0 + j],
+                            [7.0 + j, 7.0 + j]),
+                        Select("c", [1.0])])
+
+    def test_straddled_keys_differ_but_signature_matches(self):
+        r0, r1 = self.box_req(), self.box_req(self.JITTER)
+        assert r0.canonical_hash() != r1.canonical_hash()
+        assert r0.shape_signature()[0] == r1.shape_signature()[0]
+
+    def test_neighborhood_recovers_straddled_miss(self):
+        svc = ExtractionService(small_cube(), verify=True)
+        r0, r1 = self.box_req(), self.box_req(self.JITTER)
+        p0, cached0, _ = svc.plan(r0)
+        p1, cached1, _ = svc.plan(r1)
+        assert not cached0 and not cached1
+        assert svc.stats.delta_hits == 1
+        assert p1 is p0                       # zero-shift passthrough
+        np.testing.assert_array_equal(p1.offsets, p0.offsets)
+
+    def test_off_by_one_quantum_anchor_tolerance(self):
+        # a whole-step drift plus sub-quantum jitter still resolves to
+        # an integral step count (the ratio check absorbs the jitter)
+        svc = ExtractionService(small_cube(), verify=True)
+        svc.plan(self.box_req())
+        plan, cached, _ = svc.plan(self.box_req(1.0 + self.JITTER))
+        assert not cached
+        assert svc.stats.delta_hits == 1
+        cold = Slicer(small_cube()).extract_plan(
+            self.box_req(1.0 + self.JITTER))[0]
+        np.testing.assert_array_equal(plan.offsets, cold.offsets)

@@ -308,6 +308,36 @@ class TestShardRebalance:
             assert cache.get(k) == f"plan-{i}"
         assert len(cache) == self.N_KEYS
 
+    def test_migrations_counter_matches_moved(self):
+        """Regression: ``PlanCache.pop`` must count each entry actually
+        drained during rebalance, so fleet-wide ``stats.migrations``
+        equals the migration report — and nothing else inflates it."""
+        cache = ShardedPlanCache(shards=4, capacity_per_shard=self.N_KEYS)
+        keys = _synthetic_keys(500, self.SEED + 2)
+        for i, k in enumerate(keys):
+            cache.put(k, i)
+        assert cache.stats.migrations == 0
+        moved = cache.add_shard("shard4")
+        assert cache.stats.migrations == moved
+        moved_back = cache.remove_shard("shard4")
+        # remove_shard folds the drained shard's counters into a
+        # survivor, so the add-phase migrations are preserved too
+        assert cache.stats.migrations == moved + moved_back
+        for i, k in enumerate(keys):
+            assert cache.get(k) == i
+
+    def test_remove_shard_conserves_stats(self):
+        cache = ShardedPlanCache(shards=3, capacity_per_shard=self.N_KEYS)
+        keys = _synthetic_keys(300, self.SEED + 3)
+        for i, k in enumerate(keys):
+            cache.put(k, i)
+        for k in keys:
+            cache.get(k)
+        hits_before = cache.stats.hits
+        cache.add_shard("doomed")
+        cache.remove_shard("doomed")
+        assert cache.stats.hits == hits_before
+
     def test_add_then_remove_restores_routing(self):
         cache = ShardedPlanCache(shards=4, capacity_per_shard=self.N_KEYS)
         keys = _synthetic_keys(500, self.SEED + 1)
